@@ -1,0 +1,38 @@
+"""Roofline table from the multi-pod dry-run artifacts (deliverable g).
+
+Reads dryrun_results.json (produced by launch/dryrun.py --all --both-meshes)
+and prints the three-term roofline per (arch x shape x mesh): compute /
+memory / collective seconds, the dominant term, MODEL_FLOPS/HLO_FLOPS, and
+per-device peak memory.
+"""
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "dryrun_results.json")
+
+
+def run() -> None:
+    if not os.path.exists(RESULTS):
+        emit("roofline_missing", 0.0,
+             f"run `python -m repro.launch.dryrun --all --both-meshes "
+             f"--out {RESULTS}` first")
+        return
+    with open(RESULTS) as f:
+        results = json.load(f)
+    for r in results:
+        name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        if r["status"] == "skipped":
+            emit(name, 0.0, "SKIP: " + r["reason"])
+            continue
+        if r["status"] != "ok":
+            emit(name, 0.0, "ERROR: " + r.get("error", "?"))
+            continue
+        roof = r["roofline"]
+        step_s = max(roof["compute_s"], roof["memory_s"], roof["collective_s"])
+        emit(name, step_s * 1e6,
+             f"c={roof['compute_s']:.4f}s m={roof['memory_s']:.4f}s "
+             f"coll={roof['collective_s']:.4f}s dom={roof['dominant']} "
+             f"useful={roof['useful_ratio']:.2f} "
+             f"peak={r['memory']['peak_gb_per_device']:.1f}GB")

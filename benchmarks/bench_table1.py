@@ -1,0 +1,45 @@
+"""Paper Table 1: CIFAR-10 HI vs no-offload vs full-offload.
+
+Measures the HI cascade mechanism (S-CNN + fused hi_gate + router + L-CNN,
+one jit program) per-batch latency, and derives the paper's exact Table-1
+cost accounting from the replay module.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_us
+from repro.configs.base import HIConfig
+from repro.core import replay
+from repro.core.cascade import classifier_cascade
+from repro.models import cnn
+
+
+def run() -> None:
+    rng = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    ps = cnn.init_cnn(k1, cnn.SML_CIFAR)
+    pl = cnn.init_cnn(k2, cnn.LML_CIFAR)
+    x = jax.random.normal(k3, (256, 32, 32, 3))
+
+    hi = HIConfig(theta=0.607, beta=0.5, capacity_factor=0.5)
+    casc = classifier_cascade(
+        lambda p, xx: cnn.apply_cnn(p, cnn.SML_CIFAR, xx),
+        lambda p, xx: cnn.apply_cnn(p, cnn.LML_CIFAR, xx),
+        hi, use_kernel=True)
+    infer = casc.infer_jit()
+
+    us = time_us(lambda: infer(ps, pl, x))
+    t = replay.table1(0.5)
+    emit("table1_hi_cascade_b256", us,
+         f"paper: HI cost {t['hi'].cost:.0f} vs full "
+         f"{t['full_offload'].cost:.0f} vs local {t['no_offload'].cost:.0f}; "
+         f"HI acc {t['hi'].accuracy:.2%} offload 35.5%")
+
+    # S-only and L-only reference points (the no-offload / full-offload rows)
+    s_only = jax.jit(lambda p, xx: cnn.apply_cnn(p, cnn.SML_CIFAR, xx))
+    l_only = jax.jit(lambda p, xx: cnn.apply_cnn(p, cnn.LML_CIFAR, xx))
+    emit("table1_no_offload_b256", time_us(lambda: s_only(ps, x)),
+         "paper acc 62.58% cost 3742")
+    emit("table1_full_offload_b256", time_us(lambda: l_only(pl, x)),
+         "paper acc 95% cost 10000b+500")

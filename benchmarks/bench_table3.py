@@ -1,0 +1,31 @@
+"""Paper Table 3: the binary relevance-filter cascade (dog breeds)."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_us
+from repro.configs.base import HIConfig
+from repro.core import replay
+from repro.core.cascade import classifier_cascade
+from repro.models import cnn
+
+
+def run() -> None:
+    rng = jax.random.PRNGKey(1)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    ps = cnn.init_cnn(k1, cnn.SML_BINARY)
+    pl = cnn.init_cnn(k2, cnn.LML_CIFAR)
+    x = jax.random.normal(k3, (256, 32, 32, 3))
+
+    # §5 rule: offload iff p >= theta (positives are complex)
+    hi = HIConfig(theta=0.5, capacity_factor=0.5, binary_relevance=True)
+    casc = classifier_cascade(
+        lambda p, xx: cnn.apply_cnn(p, cnn.SML_BINARY, xx),
+        lambda p, xx: cnn.apply_cnn(p, cnn.LML_CIFAR, xx),
+        hi)
+    infer = casc.infer_jit()
+    us = time_us(lambda: infer(ps, pl, x))
+
+    d = replay.DogReplay()
+    emit("table3_binary_filter_b256", us,
+         f"paper: offloaded {d.n_offloaded}/10000 acc {d.accuracy:.1%} "
+         f"cost 912b+3521; reduction@b=0.5 {d.cost_reduction(0.5):.1f}%")

@@ -1,0 +1,40 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [module ...]
+"""
+import sys
+import traceback
+
+from benchmarks import (bench_fig8, bench_kernels, bench_partitioning,
+                        bench_reb, bench_roofline, bench_table1, bench_table3)
+
+ALL = {
+    "table1": bench_table1,        # paper Table 1 (CIFAR-10 HI costs)
+    "table3": bench_table3,        # paper Table 3 (dog filter)
+    "fig8": bench_fig8,            # paper Fig 8 (5-approach comparison)
+    "partitioning": bench_partitioning,   # appendix Tables 4-6
+    "reb": bench_reb,              # §3 Figs 4-5 (REB thresholds, bandwidth)
+    "kernels": bench_kernels,      # Pallas kernels vs oracles
+    "roofline": bench_roofline,    # dry-run roofline table (deliverable g)
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(ALL)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        try:
+            ALL[name].run()
+        except Exception:  # noqa: BLE001 — keep the harness going
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"FAILED benchmarks: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

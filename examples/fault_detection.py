@@ -1,0 +1,69 @@
+"""Paper §3: HI for rolling-element (REB) fault diagnosis.
+
+S-ML = the paper's moving-average threshold rule (mean |x| of a 4096-sample
+window vs 0.07) running on the sensor; L-ML = the 8-layer CNN of [38]
+classifying the 10 machine states, deployed at the ES.  Only windows the
+threshold flags as NOT-normal are offloaded.
+
+Reproduces, on the CWRU-statistics-matched synthetic dataset:
+  * 100% normal-vs-fault separation by the 0.07 threshold (Figs. 4–5)
+  * near-total bandwidth savings when machines are mostly normal
+  * the CNN resolving the fault states the threshold cannot (Fig. 5)
+
+  PYTHONPATH=src python examples/fault_detection.py
+"""
+import numpy as np
+
+from repro.data import vibration as vib
+from repro.models import cnn
+from repro.training.cnn_trainer import accuracy, train_cnn
+
+
+def main():
+    # --- train the L-ML fault CNN on (balanced) fault data -----------------
+    x_tr, y_tr, _ = vib.make_dataset(windows_per_state=100, seed=0)
+    x_te, y_te, means_te = vib.make_dataset(windows_per_state=25, seed=1)
+    print(f"training {cnn.FAULT_CNN.name} on {len(x_tr)} windows ...")
+    params = train_cnn(cnn.FAULT_CNN, x_tr, y_tr, epochs=20, batch=64,
+                       lr=2e-3)
+    cnn_acc = accuracy(params, cnn.FAULT_CNN, x_te, y_te)
+    print(f"L-ML (CNN) 10-state accuracy: {cnn_acc:.1%} "
+          f"(paper's CNN [38]: 99.6%; more data/epochs close the gap — "
+          f"this budget is CPU-bound)")
+
+    # --- the S-ML threshold rule (paper: theta = 0.07) ----------------------
+    is_fault_pred = vib.threshold_sml(means_te, theta=0.07)
+    is_fault_true = y_te != 0
+    tp = (is_fault_pred & is_fault_true).sum()
+    tn = (~is_fault_pred & ~is_fault_true).sum()
+    print(f"threshold S-ML normal-vs-fault accuracy: "
+          f"{(tp + tn) / len(y_te):.1%}  (paper: 100%)")
+
+    # --- HI deployment: realistic duty cycle (machines mostly normal) ------
+    x_op, y_op, means_op = vib.make_dataset(windows_per_state=40, seed=2,
+                                            normal_fraction=0.98)
+    offload = vib.threshold_sml(means_op, 0.07)
+    frac = offload.mean()
+    print(f"\noperational stream: {len(y_op)} windows, "
+          f"{(y_op == 0).mean():.1%} normal")
+    print(f"HI offloads {offload.sum()}/{len(y_op)} windows ({frac:.2%})")
+
+    full_bw = vib.bandwidth_required(num_machines=100)
+    print(f"full-offload bandwidth for 100 machines: {full_bw:.1f} Mbps "
+          f"(paper: >= 76.8 Mbps)")
+    print(f"HI bandwidth: {full_bw * frac:.2f} Mbps "
+          f"-> {(1 - frac):.1%} bandwidth saved")
+
+    # fault windows that do offload get correctly classified by the CNN
+    if offload.any():
+        acc_off = accuracy(params, cnn.FAULT_CNN,
+                           x_op[offload], y_op[offload])
+        print(f"CNN accuracy on offloaded windows: {acc_off:.1%}")
+
+    # missed faults (false negatives of the threshold rule)
+    missed = (~offload & (y_op != 0)).sum()
+    print(f"fault windows missed by the threshold: {missed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Dev scratchpad: tiny forward/decode for every family (not part of tests)."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCHS
+from repro.models import model_zoo as zoo
+
+
+def batch_for(cfg, b=2, s=16):
+    rng = jax.random.PRNGKey(0)
+    batch = {
+        "tokens": jax.random.randint(rng, (b, s), 0, cfg.vocab_size),
+        "labels": jax.random.randint(rng, (b, s), 0, cfg.vocab_size),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(rng, (b, cfg.num_audio_frames,
+                                                  cfg.d_model))
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(rng, (b, cfg.num_patches,
+                                                   cfg.d_model))
+    return batch
+
+
+def main():
+    names = sys.argv[1:] or list(ARCHS)
+    for name in names:
+        cfg = ARCHS[name].reduced()
+        rng = jax.random.PRNGKey(0)
+        params = zoo.init_params(rng, cfg)
+        batch = batch_for(cfg)
+        total, metrics = jax.jit(
+            lambda p, b: zoo.loss(p, cfg, b))(params, batch)
+        assert jnp.isfinite(total), (name, total)
+        # decode one token
+        cache = zoo.init_cache(cfg, 2, 32)
+        if cfg.family == "encdec":
+            from repro.models import whisper
+            cache = whisper.precompute_cross(params, cfg, batch["frames"], cache)
+        logits, cache = jax.jit(
+            lambda p, t, c: zoo.decode_step(p, cfg, t, c))(
+                params, batch["tokens"][:, :1], cache)
+        assert jnp.isfinite(logits).all(), name
+        print(f"OK {name}: loss={float(total):.3f} "
+              f"decode_logits_shape={logits.shape}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Checkpointing: msgpack-serialised pytrees with dtype/shape manifest.
+
+No orbax in this environment; this is a small, dependency-light format:
+  <dir>/manifest.msgpack   — tree structure, shapes, dtypes, step
+  <dir>/arrays.npz         — flattened leaves by index
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _paths(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    return flat, treedef
+
+
+def save(directory: str, tree: Any, step: int = 0,
+         extra: Optional[Dict[str, Any]] = None) -> None:
+    os.makedirs(directory, exist_ok=True)
+    flat, treedef = _paths(tree)
+    arrays = {f"a{i}": np.asarray(x) for i, x in enumerate(flat)}
+    manifest = {
+        "treedef": str(treedef),
+        "num_leaves": len(flat),
+        "step": step,
+        "shapes": [list(a.shape) for a in arrays.values()],
+        "dtypes": [str(a.dtype) for a in arrays.values()],
+        "extra": extra or {},
+    }
+    with open(os.path.join(directory, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    np.savez(os.path.join(directory, "arrays.npz"), **arrays)
+
+
+def restore(directory: str, like: Any) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (shapes/dtypes must match)."""
+    with open(os.path.join(directory, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    data = np.load(os.path.join(directory, "arrays.npz"))
+    flat_like, treedef = _paths(like)
+    if manifest["num_leaves"] != len(flat_like):
+        raise ValueError("checkpoint structure mismatch: "
+                         f"{manifest['num_leaves']} leaves vs {len(flat_like)}")
+    flat = []
+    for i, ref in enumerate(flat_like):
+        arr = data[f"a{i}"]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"leaf {i}: shape {arr.shape} != {ref.shape}")
+        flat.append(jnp.asarray(arr, dtype=ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, flat), manifest["step"]
+
+
+def exists(directory: str) -> bool:
+    return os.path.exists(os.path.join(directory, "manifest.msgpack"))

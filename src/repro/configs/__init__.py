@@ -1,0 +1,5 @@
+from repro.configs.base import (  # noqa: F401
+    DENSE, MOE, SSM, HYBRID, ENCDEC, VLM, FAMILIES,
+    ModelConfig, ShapeConfig, HIConfig, TrainConfig,
+    TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K, SHAPES,
+)

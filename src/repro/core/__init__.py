@@ -1,0 +1,13 @@
+"""The paper's primary contribution: Hierarchical Inference (HI).
+
+confidence -> policy -> router -> cascade is the Figure-1 pipeline;
+cost/calibrate/replay implement the paper's cost model and its published
+tables; baselines implements the §6 comparison points.
+"""
+from repro.core.cascade import HICascade, classifier_cascade  # noqa: F401
+from repro.core.confidence import confidence  # noqa: F401
+from repro.core.cost import CostReport, cost_closed_form  # noqa: F401
+from repro.core.policy import (AlwaysOffload, BinaryRelevancePolicy,  # noqa: F401
+                               NeverOffload, OnlineThresholdPolicy,
+                               ThresholdPolicy)
+from repro.core.router import RouteDecision, route  # noqa: F401

@@ -1,0 +1,86 @@
+"""HICascade: the paper's Figure-1 pipeline as one composable JAX module.
+
+    S-tier forward on every sample
+      -> confidence (fused hi_gate kernel or jnp oracle)
+      -> policy decision (offload iff conf < theta)
+      -> static-capacity router gather
+      -> L-tier forward on the complex batch
+      -> scatter-merge
+
+The whole thing is a single jit/pjit-able function; under a mesh the gather
+IS the ED→ES offload link and its collective bytes are the paper's beta.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import HIConfig
+from repro.core.confidence import confidence as _confidence
+from repro.core import router as R
+
+ApplyFn = Callable[[Any, jnp.ndarray], jnp.ndarray]   # (params, x) -> logits
+
+
+@dataclass(frozen=True)
+class HICascade:
+    """S/L apply functions + the HI decision parameters."""
+
+    s_apply: ApplyFn
+    l_apply: ApplyFn
+    hi: HIConfig
+    use_kernel: bool = False
+
+    def _confidence(self, s_logits: jnp.ndarray) -> jnp.ndarray:
+        if self.use_kernel:
+            from repro.kernels import ops as kops
+            return kops.hi_gate(s_logits, self.hi.theta,
+                                metric=self.hi.metric)[0]
+        return _confidence(s_logits, self.hi.metric)
+
+    def _decide(self, conf: jnp.ndarray) -> jnp.ndarray:
+        if self.hi.binary_relevance:
+            return conf >= self.hi.theta          # §5: positives are complex
+        return conf < self.hi.theta               # §4: low confidence offloads
+
+    def infer(self, s_params: Any, l_params: Any, x: jnp.ndarray
+              ) -> Dict[str, jnp.ndarray]:
+        """x: (N, ...) -> dict of predictions + offload accounting."""
+        n = x.shape[0]
+        cap = R.capacity_for(n, self.hi.capacity_factor)
+
+        s_logits = self.s_apply(s_params, x)
+        conf = self._confidence(s_logits)
+        offload = self._decide(conf)
+        decision = R.route(offload, conf, cap)
+
+        x_complex = R.gather(x, decision)
+        l_logits = self.l_apply(l_params, x_complex)
+
+        s_pred = jnp.argmax(s_logits, axis=-1) if s_logits.shape[-1] > 1 \
+            else (conf >= 0.5).astype(jnp.int32)
+        l_pred = jnp.argmax(l_logits, axis=-1)
+        pred = R.scatter_merge(s_pred, l_pred.astype(s_pred.dtype), decision)
+
+        return {
+            "pred": pred,
+            "s_pred": s_pred,
+            "conf": conf,
+            "offload_mask": decision.offload_mask,
+            "served_remote": decision.served_remote,
+            "dropped": decision.dropped,
+            "n_offloaded": jnp.sum(decision.offload_mask.astype(jnp.int32)),
+        }
+
+    def infer_jit(self) -> Callable:
+        return jax.jit(self.infer)
+
+
+def classifier_cascade(s_apply: ApplyFn, l_apply: ApplyFn, hi: HIConfig,
+                       use_kernel: bool = False) -> HICascade:
+    return HICascade(s_apply=s_apply, l_apply=l_apply, hi=hi,
+                     use_kernel=use_kernel)

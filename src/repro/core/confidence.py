@@ -1,0 +1,58 @@
+"""Confidence metrics over S-ML output logits (paper §4).
+
+The paper uses the max softmax probability p; we additionally provide margin
+and (negated, normalised) entropy so the decision module is pluggable.  All
+metrics are oriented so HIGHER = more confident, and live in [0, 1], which
+keeps the paper's threshold rule ``offload iff conf < theta`` uniform.
+
+``kernels/hi_gate.py`` is the fused Pallas version of :func:`confidence` +
+threshold; this module is its oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+METRICS = ("max_prob", "margin", "entropy")
+
+
+def max_prob(logits: jnp.ndarray) -> jnp.ndarray:
+    """(..., C) -> (...): max softmax probability (the paper's p)."""
+    return jnp.max(jax.nn.softmax(logits.astype(jnp.float32), axis=-1), axis=-1)
+
+
+def margin(logits: jnp.ndarray) -> jnp.ndarray:
+    """Top1 - top2 softmax probability."""
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top2 = jax.lax.top_k(p, 2)[0]
+    return top2[..., 0] - top2[..., 1]
+
+
+def entropy_conf(logits: jnp.ndarray) -> jnp.ndarray:
+    """1 - H(p)/log(C): 1 = deterministic pmf, 0 = uniform."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    p = jnp.exp(logp)
+    h = -jnp.sum(p * logp, axis=-1)
+    return 1.0 - h / jnp.log(logits.shape[-1])
+
+
+def binary_prob(logits: jnp.ndarray) -> jnp.ndarray:
+    """Sigmoid score for single-logit binary heads (§5 dog filter)."""
+    return jax.nn.sigmoid(logits.astype(jnp.float32))[..., 0]
+
+
+def confidence(logits: jnp.ndarray, metric: str = "max_prob") -> jnp.ndarray:
+    if logits.shape[-1] == 1:
+        return binary_prob(logits)
+    if metric == "max_prob":
+        return max_prob(logits)
+    if metric == "margin":
+        return margin(logits)
+    if metric == "entropy":
+        return entropy_conf(logits)
+    raise ValueError(f"unknown confidence metric {metric!r}")
+
+
+def temperature_scale(logits: jnp.ndarray, temp: float) -> jnp.ndarray:
+    """Post-hoc calibration knob (higher temp -> softer pmf)."""
+    return logits / jnp.maximum(temp, 1e-6)

@@ -1,0 +1,108 @@
+"""Offload decision policies (the HI decision module of Fig. 1).
+
+* :class:`ThresholdPolicy` — the paper's rule: offload iff conf < theta.
+* :class:`BinaryRelevancePolicy` — §5 dog-filter rule: offload iff p >= theta
+  (the *positive* class is the complex one).
+* :class:`OnlineThresholdPolicy` — no-regret online tuning of theta via an
+  EXP3-style bandit over a discretised threshold grid, following the paper's
+  companion work [27] (Moothedath et al., Online Algorithms for HI): after
+  each sample we observe the *full-information* cost of every candidate
+  threshold (the cost is computable counterfactually from (conf, s_correct)),
+  so this is exponentially-weighted-average forecasting (Hedge) over experts.
+* :class:`AlwaysOffload` / :class:`NeverOffload` — the full-offload and
+  tinyML endpoints.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class Policy:
+    def offload(self, conf: jnp.ndarray) -> jnp.ndarray:
+        raise NotImplementedError
+
+    name: str = "policy"
+
+
+@dataclass
+class ThresholdPolicy(Policy):
+    theta: float = 0.607
+    name: str = "hi-threshold"
+
+    def offload(self, conf):
+        return conf < self.theta
+
+
+@dataclass
+class BinaryRelevancePolicy(Policy):
+    """Offload the samples of interest (conf = P(positive class))."""
+    theta: float = 0.5
+    name: str = "hi-binary"
+
+    def offload(self, conf):
+        return conf >= self.theta
+
+
+@dataclass
+class AlwaysOffload(Policy):
+    name: str = "full-offload"
+
+    def offload(self, conf):
+        return jnp.ones_like(conf, dtype=bool)
+
+
+@dataclass
+class NeverOffload(Policy):
+    name: str = "tinyml"
+
+    def offload(self, conf):
+        return jnp.zeros_like(conf, dtype=bool)
+
+
+class OnlineThresholdPolicy(Policy):
+    """Hedge over a grid of thresholds; full-information counterfactual cost.
+
+    After serving sample i we can evaluate, for every candidate theta, the
+    cost that theta *would* have incurred: offloading costs ~(beta + E[eta]),
+    accepting costs gamma_i.  Weights update multiplicatively; the acting
+    threshold is the weighted median, so the policy converges to theta*
+    (paper [27], Thm. 1-style guarantee).
+    """
+
+    name = "hi-online"
+
+    def __init__(self, beta: float, grid: int = 64, eta_lr: float = 0.15,
+                 l_ml_err: float = 0.0):
+        self.grid = np.linspace(0.0, 1.0, grid, endpoint=False)
+        self.w = np.ones(grid, dtype=np.float64)
+        self.beta = beta
+        self.eta_lr = eta_lr
+        self.l_ml_err = l_ml_err     # expected remote error E[eta]
+        self.history: list[float] = []
+
+    @property
+    def theta(self) -> float:
+        p = self.w / self.w.sum()
+        cdf = np.cumsum(p)
+        return float(self.grid[int(np.searchsorted(cdf, 0.5))])
+
+    def offload(self, conf):
+        return conf < self.theta
+
+    def update(self, conf: np.ndarray, s_correct: np.ndarray) -> None:
+        """Batched counterfactual update."""
+        conf = np.asarray(conf, np.float64)
+        ok = np.asarray(s_correct, np.float64)
+        for c, k in zip(conf, ok):
+            # cost of each candidate theta on this sample
+            offload = c < self.grid
+            cost = np.where(offload, self.beta + self.l_ml_err, 1.0 - k)
+            self.w *= np.exp(-self.eta_lr * cost)
+            s = self.w.sum()
+            if s < 1e-290:           # renormalise to dodge underflow
+                self.w /= s
+            self.history.append(self.theta)

@@ -1,0 +1,63 @@
+"""Static-capacity sample router — HI's offload on a TPU fabric.
+
+XLA needs static shapes, so "offload the complex samples" becomes: pick the
+``capacity`` highest-priority samples (priority = wants-offload first, then
+lowest confidence), gather them into a fixed (capacity, ...) batch for the
+L-tier, and scatter-merge L-tier outputs back.  Samples that want offload but
+exceed capacity are *dropped escalations* (served with the S-tier result) and
+counted — the same accounting MoE frameworks report for token dropping.
+
+This mirrors the MoE dispatch in models/moe.py one level up: the paper's ED→ES
+link is the gather collective across the mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class RouteDecision(NamedTuple):
+    indices: jnp.ndarray      # (C,) int32 — positions gathered for the L-tier
+    valid: jnp.ndarray        # (C,) bool  — gathered slot actually wants offload
+    offload_mask: jnp.ndarray  # (N,) bool — the policy's raw decision
+    served_remote: jnp.ndarray  # (N,) bool — offloaded AND within capacity
+    dropped: jnp.ndarray      # ()   int32 — wanted offload, no capacity
+
+
+def route(offload_mask: jnp.ndarray, conf: jnp.ndarray,
+          capacity: int) -> RouteDecision:
+    """offload_mask, conf: (N,).  capacity: static int <= N."""
+    n = offload_mask.shape[0]
+    if not 0 < capacity <= n:
+        raise ValueError(f"capacity {capacity} must be in (0, {n}]")
+    # priority: offloads first (by ascending confidence), non-offloads last
+    prio = jnp.where(offload_mask, 2.0 - conf, -conf)
+    _, idx = jax.lax.top_k(prio, capacity)
+    valid = offload_mask[idx]
+    served = jnp.zeros((n,), bool).at[idx].set(valid)
+    dropped = jnp.sum(offload_mask) - jnp.sum(valid)
+    return RouteDecision(idx.astype(jnp.int32), valid, offload_mask,
+                         served, dropped.astype(jnp.int32))
+
+
+def gather(x: jnp.ndarray, decision: RouteDecision) -> jnp.ndarray:
+    """(N, ...) -> (C, ...) complex-sample batch for the L-tier."""
+    return x[decision.indices]
+
+
+def scatter_merge(s_out: jnp.ndarray, l_out: jnp.ndarray,
+                  decision: RouteDecision) -> jnp.ndarray:
+    """Merge L-tier outputs over S-tier outputs at the served positions.
+
+    s_out: (N, ...); l_out: (C, ...) aligned with decision.indices.
+    """
+    upd = jnp.where(
+        decision.valid.reshape((-1,) + (1,) * (l_out.ndim - 1)),
+        l_out, s_out[decision.indices])
+    return s_out.at[decision.indices].set(upd)
+
+
+def capacity_for(batch: int, capacity_factor: float) -> int:
+    return max(1, min(batch, int(round(batch * capacity_factor))))

@@ -1,0 +1,108 @@
+"""decode_attention — flash-style single-token GQA attention over a long KV
+cache (the decode_32k / long_500k hot spot).
+
+One query token attends over S cached keys.  The kernel streams the cache
+through VMEM in ``block_s`` tiles and keeps the online-softmax state
+(running max m, normaliser l, accumulator acc) in revisited output blocks —
+the grid's last dimension is sequential on TPU, which makes output revisiting
+the canonical accumulation idiom (no scratch carry needed across grid steps).
+
+Grid: (batch, kv_head, S // block_s).  Each step loads:
+  q    (1, 1, G, D)   — the G query heads of this kv group   [VMEM]
+  k/v  (1, block_s, 1, D)                                      [VMEM]
+  mask (1, block_s)    — validity (pos, sliding window)        [VMEM]
+so VMEM per step is ~2 * block_s * D * itemsize, independent of S — this is
+what makes the 500k-token cache workable.
+
+Numerical-safety choices: running max starts at -1e30 (finite, so the
+`exp(m - m_new)` correction never sees inf-inf = NaN) and masked probability
+mass is explicitly zeroed (a fully-masked tile keeps l = 0).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref, acc_ref, m_ref, l_ref, *,
+            scale: float):
+    sb = pl.program_id(2)
+
+    @pl.when(sb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)           # (bs, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)           # (bs, D)
+    valid = mask_ref[0] > 0                          # (bs,)
+
+    scores = (q @ k.T) * scale                        # (G, bs)
+    scores = jnp.where(valid[None, :], scores, _NEG)
+
+    m_prev = m_ref[0, 0]                              # (G,)
+    l_prev = l_ref[0, 0]
+    acc_prev = acc_ref[0, 0]                          # (G, D)
+
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+    p = jnp.exp(scores - m_new[:, None]) * valid[None, :].astype(jnp.float32)
+    corr = jnp.exp(m_prev - m_new)
+
+    m_ref[0, 0] = m_new
+    l_ref[0, 0] = l_prev * corr + jnp.sum(p, axis=-1)
+    acc_ref[0, 0] = acc_prev * corr[:, None] + p @ v
+
+
+def decode_attention_pallas(q: jnp.ndarray, cache_k: jnp.ndarray,
+                            cache_v: jnp.ndarray, valid: jnp.ndarray,
+                            *, block_s: int = 512, interpret: bool = True
+                            ) -> jnp.ndarray:
+    """q: (B, 1, H, D); cache_k/v: (B, S, K, D); valid: (S,) bool.
+
+    Returns (B, 1, H, D) attention output (fp32 accumulation)."""
+    b, _, h, d = q.shape
+    s, kh = cache_k.shape[1], cache_k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, kh, g, d)
+    if s % block_s:
+        block_s = math.gcd(s, block_s) if s % block_s else block_s
+        while s % block_s:
+            block_s //= 2
+        block_s = max(block_s, 1)
+    nsb = s // block_s
+    mask = jnp.broadcast_to(valid.astype(jnp.int32)[None, :], (b, s))
+
+    kernel = functools.partial(_kernel, scale=1.0 / math.sqrt(d))
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid=(b, kh, nsb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, ki, si: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, d), lambda bi, ki, si: (bi, si, ki, 0)),
+            pl.BlockSpec((1, block_s, 1, d), lambda bi, ki, si: (bi, si, ki, 0)),
+            pl.BlockSpec((1, block_s), lambda bi, ki, si: (bi, si)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, ki, si: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, 1, g), lambda bi, ki, si: (bi, ki, 0)),
+            pl.BlockSpec((1, 1, g), lambda bi, ki, si: (bi, ki, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kh, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, kh, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, kh, g), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, cache_k, cache_v, mask)
+
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, 1, h, d).astype(q.dtype)

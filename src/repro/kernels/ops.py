@@ -1,0 +1,79 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``interpret=True`` everywhere in this environment (CPU container; TPU is the
+target).  On a real TPU deployment flip ``INTERPRET`` to False — kernels are
+written against the TPU lowering (BlockSpec VMEM tiling, sequential last grid
+dim, output revisiting).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _da
+from repro.kernels import hi_gate as _hg
+from repro.kernels import ssd_scan as _ssd
+
+INTERPRET = True    # CPU container: validate kernel bodies via interpreter
+
+
+@functools.partial(jax.jit, static_argnames=("theta", "metric"))
+def hi_gate(logits: jnp.ndarray, theta: float, metric: str = "max_prob"
+            ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused confidence + argmax + threshold.  logits: (N, C)."""
+    return _hg.hi_gate_pallas(logits, theta, metric, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def decode_attention(q: jnp.ndarray, cache_k: jnp.ndarray,
+                     cache_v: jnp.ndarray, valid: jnp.ndarray,
+                     block_s: int = 512) -> jnp.ndarray:
+    """Flash decode attention.  q: (B,1,H,D); cache: (B,S,K,D); valid: (S,)."""
+    return _da.decode_attention_pallas(q, cache_k, cache_v, valid,
+                                       block_s=block_s, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
+        C: jnp.ndarray, chunk: int = 128) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD: Pallas intra-chunk kernel + jnp inter-chunk recurrence.
+
+    x: (b, l, h, p); dt: (b, l, h); A: (h,); B/C: (b, l, n).
+    Returns (y (b,l,h,p), final_state (b,h,p,n))."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, l)
+    orig_l = l
+    if l % chunk:
+        pad = chunk - l % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        l += pad
+    nc = l // chunk
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    y_diag, S, g, eacs = _ssd.ssd_chunk_pallas(xc, dtc, A, Bc, Cc,
+                                               interpret=INTERPRET)
+
+    # inter-chunk linear recurrence (tiny: nc steps over (b,h,p,n))
+    def step(hprev, xs):
+        g_c, S_c = xs
+        return g_c[:, :, None, None] * hprev + S_c, hprev
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    hT, h_prevs = jax.lax.scan(
+        step, h0, (g.transpose(1, 0, 2), S.transpose(1, 0, 2, 3, 4)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)          # (b, nc, h, p, n)
+
+    y_off = jnp.einsum("bcih,bcin,bchpn->bcihp", eacs, Cc, h_prevs)
+    y = (y_diag + y_off).reshape(b, l, h, p)[:, :orig_l]
+    return y.astype(x.dtype), hT

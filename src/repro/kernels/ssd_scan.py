@@ -1,0 +1,118 @@
+"""ssd_scan — Mamba-2 SSD intra-chunk kernel (the quadratic hot spot).
+
+The chunked SSD algorithm splits into:
+  (a) intra-chunk: attention-like (Q x Q) compute per chunk — O(L*Q) FLOPs,
+      the dominant term and the MXU-friendly part      -> THIS KERNEL
+  (b) inter-chunk: linear recurrence over chunk states — O(L/Q) tiny scan
+      -> stays in jnp (ops.py), it is bandwidth-trivial
+
+Per grid step (batch b, chunk c, head-block hb) the kernel computes, entirely
+in VMEM:
+  y_diag  (Q, hb, P)  causal decay-masked intra-chunk output
+  S       (hb, P, N)  end-of-chunk summary state (feeds the jnp scan)
+  g       (hb,)       total chunk decay  exp(sum a)
+  exp_acs (Q, hb)     exp(cumsum a) — reused for the inter-chunk y_off term
+
+Tiling: Q (chunk) and the headblock are the VMEM tile knobs; Q=128 aligns the
+(Q x Q) decay matmul with the 128x128 MXU.  The (Q, Q, hb) decay tensor this
+kernel materialises per step is exactly the buffer the pure-jnp path would
+materialise for the WHOLE sequence at once — the kernel bounds it to one tile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+            y_ref, s_ref, g_ref, eacs_ref):
+    x = x_ref[0, 0].astype(jnp.float32)       # (Q, hb, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)     # (Q, hb)
+    A = a_ref[...].astype(jnp.float32)        # (hb,)
+    B = b_ref[0, 0].astype(jnp.float32)       # (Q, N)
+    C = c_ref[0, 0].astype(jnp.float32)       # (Q, N)
+    q = x.shape[0]
+
+    a = dt * A[None, :]                        # (Q, hb) log-decay
+    a_cs = jnp.cumsum(a, axis=0)
+    dx = x * dt[..., None]                     # (Q, hb, P)
+
+    # causal decay mask  L[i, j] = exp(a_cs[i] - a_cs[j]), i >= j
+    decay = jnp.exp(a_cs[:, None, :] - a_cs[None, :, :])      # (Q, Q, hb)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    decay = jnp.where((rows >= cols)[:, :, None], decay, 0.0)
+
+    cb = C @ B.T                                               # (Q, Q)
+    y_ref[0, 0] = jnp.einsum("ij,ijh,jhp->ihp", cb, decay, dx)
+
+    decay_to_end = jnp.exp(a_cs[-1:, :] - a_cs)                # (Q, hb)
+    s_ref[0, 0] = jnp.einsum("jh,jhp,jn->hpn", decay_to_end, dx, B)
+    g_ref[0, 0] = jnp.exp(a_cs[-1])
+    eacs_ref[0, 0] = jnp.exp(a_cs)
+
+
+def ssd_chunk_pallas(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                     B: jnp.ndarray, C: jnp.ndarray, *, head_block: int = 0,
+                     interpret: bool = True):
+    """Intra-chunk SSD terms.
+
+    x: (b, nc, Q, H, P); dt: (b, nc, Q, H); A: (H,); B/C: (b, nc, Q, N).
+    Returns (y_diag (b,nc,Q,H,P), S (b,nc,H,P,N), g (b,nc,H),
+             exp_acs (b,nc,Q,H))."""
+    b, nc, q, h, p = x.shape
+    n = B.shape[-1]
+    hb = head_block or h
+    while h % hb:
+        hb -= 1
+    nhb = h // hb
+
+    grid = (b * nhb, nc)
+
+    def im_x(i, c):
+        return (i // nhb, c, 0, i % nhb, 0)
+
+    def im_dt(i, c):
+        return (i // nhb, c, 0, i % nhb)
+
+    def im_a(i, c):
+        return ((i % nhb),)
+
+    def im_bc(i, c):
+        return (i // nhb, c, 0, 0)
+
+    def im_s(i, c):
+        return (i // nhb, c, i % nhb, 0, 0)
+
+    def im_g(i, c):
+        return (i // nhb, c, i % nhb)
+
+    y, S, g, eacs = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q, hb, p), im_x),
+            pl.BlockSpec((1, 1, q, hb), im_dt),
+            pl.BlockSpec((hb,), im_a),
+            pl.BlockSpec((1, 1, q, n), im_bc),
+            pl.BlockSpec((1, 1, q, n), im_bc),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, hb, p), im_x),
+            pl.BlockSpec((1, 1, hb, p, n), im_s),
+            pl.BlockSpec((1, 1, hb), im_g),
+            pl.BlockSpec((1, 1, q, hb), im_dt),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nc, q, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, h, p, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, q, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, A, B, C)
+    return y, S, g, eacs

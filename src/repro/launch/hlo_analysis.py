@@ -1,0 +1,137 @@
+"""Extract roofline terms from a lowered/compiled dry-run artifact.
+
+  compute term    = HLO_FLOPs / (chips * peak_FLOPs)
+  memory term     = HLO_bytes / (chips * HBM_bw)
+  collective term = collective_bytes / (chips * link_bw)
+
+cost_analysis() provides flops/bytes; collective bytes are parsed from the
+HLO text by summing operand sizes of all-gather / all-reduce / reduce-scatter
+/ all-to-all / collective-permute ops.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+# TPU v5e per-chip constants (assignment-specified)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes per collective kind.
+
+    HLO line shape: ``%name = TYPE opcode(T1 %a, T2 %b), ...`` — we take the
+    result-type sizes (for all-gather the gathered result, for all-reduce the
+    reduced tensor), which upper-bounds the per-op wire traffic within 2x and
+    is uniform across op kinds.
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"^(%?[\w\.\-]+)\s*=\s*(.*)$", stripped)
+        if not m:
+            continue
+        rhs = m.group(2)
+        opm = re.search(r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                        r"collective-permute)(-start|-done)?\(", rhs)
+        if not opm:
+            continue
+        if opm.group(2) == "-done":   # avoid double counting start/done pairs
+            continue
+        kind = opm.group(1)
+        # result types appear before the opcode
+        head = rhs[: opm.start()]
+        size = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(head))
+        out[kind] += size
+    return out
+
+
+@dataclass
+class Roofline:
+    """All byte/FLOP quantities are PER-CHIP (the HLO after SPMD partitioning
+    is the per-device program; global analytic counts get divided by chips
+    before they land here)."""
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_breakdown: Dict[str, int]
+    model_flops: float = 0.0
+    peak_memory_bytes: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops, "hlo_flops": self.hlo_flops,
+            "useful_ratio": self.useful_flops_ratio,
+            "peak_mem_gb": self.peak_memory_bytes / 1e9,
+        }
+
+
+def model_flops(n_params_active: float, tokens: float, mode: str) -> float:
+    """6ND for training, 2ND for inference forward."""
+    mult = 6.0 if mode == "train" else 2.0
+    return mult * n_params_active * tokens
+
+
+def parse_memory_analysis(mem) -> float:
+    """compiled.memory_analysis() -> peak bytes (best-effort across versions)."""
+    for attr in ("temp_size_in_bytes",):
+        if hasattr(mem, attr):
+            temp = getattr(mem, attr)
+            args = getattr(mem, "argument_size_in_bytes", 0)
+            out = getattr(mem, "output_size_in_bytes", 0)
+            alias = getattr(mem, "alias_size_in_bytes", 0)
+            return float(temp + args + out - alias)
+    return 0.0

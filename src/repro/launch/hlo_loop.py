@@ -1,0 +1,356 @@
+"""Loop-aware HLO/StableHLO analysis.
+
+XLA's ``compiled.cost_analysis()`` visits every instruction ONCE — a
+scan-over-layers while loop is counted as a single iteration, which would
+understate this codebase's rooflines by ~num_layers x.  Two analyzers fix
+this:
+
+* :func:`stablehlo_flops` — parses ``lowered.as_text()`` (types are inline in
+  MLIR), walks ``stablehlo.while`` regions by brace matching, extracts trip
+  counts from the loop condition's compare-against-constant, and sums
+  dot_general / convolution FLOPs x the product of enclosing trip counts.
+  This is the *global* (unpartitioned) FLOP count: divide by chip count for
+  per-chip work.  Also returns a bytes-touched estimate (dot operand/result
+  sizes, an unfused upper bound on HBM traffic for matmul-dominated graphs).
+
+* :func:`collective_bytes_loop_aware` — parses the *partitioned* optimized
+  HLO (``compiled.as_text()``), builds the computation call graph of while
+  bodies, extracts trip counts from condition computations, and sums
+  collective result bytes x trip multiplier.  These shapes are per-device,
+  i.e. exactly the wire bytes each chip moves.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "i1": 1, "s8": 1, "u8": 1, "i8": 1, "s16": 2, "u16": 2,
+    "i16": 2, "s32": 4, "u32": 4, "i32": 4, "s64": 8, "u64": 8, "i64": 8,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+# ---------------------------------------------------------------------------
+# StableHLO (lowered, unpartitioned): FLOPs + dot bytes, loop-aware
+# ---------------------------------------------------------------------------
+
+_TENSOR_RE = re.compile(r"tensor<([0-9x]*)x?([a-z0-9]+)>")
+
+
+def _tensor_numel_bytes(txt: str) -> Tuple[int, int]:
+    m = _TENSOR_RE.search(txt)
+    if not m:
+        return 0, 0
+    dims, dt = m.group(1), m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split("x"):
+            if d:
+                n *= int(d)
+    return n, n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _tensor_dims(txt: str) -> List[int]:
+    m = _TENSOR_RE.search(txt)
+    if not m or not m.group(1):
+        return []
+    return [int(d) for d in m.group(1).split("x") if d]
+
+
+@dataclass
+class FlopCount:
+    flops: float = 0.0
+    dot_bytes: float = 0.0
+
+
+def _dot_flops(line: str) -> Tuple[float, float]:
+    """FLOPs + operand/result bytes of one stablehlo.dot_general line."""
+    # type signature at the end: ... : (tensor<...>, tensor<...>) -> tensor<...>
+    sig = re.search(r":\s*\(\s*(tensor<[^>]+>)\s*,\s*(tensor<[^>]+>)\s*\)\s*->\s*(tensor<[^>]+>)", line)
+    if not sig:
+        return 0.0, 0.0
+    lhs_t, rhs_t, out_t = sig.group(1), sig.group(2), sig.group(3)
+    lhs_dims = _tensor_dims(lhs_t)
+    cd = re.search(r"contracting_dims\s*=\s*\[([0-9, ]*)\]", line)
+    k = 1
+    if cd and cd.group(1).strip():
+        for d in cd.group(1).split(","):
+            k *= lhs_dims[int(d)]
+    out_n, out_b = _tensor_numel_bytes(out_t)
+    _, lhs_b = _tensor_numel_bytes(lhs_t)
+    _, rhs_b = _tensor_numel_bytes(rhs_t)
+    return 2.0 * out_n * k, float(lhs_b + rhs_b + out_b)
+
+
+def _conv_flops(line: str) -> Tuple[float, float]:
+    sig = re.search(r":\s*\(\s*(tensor<[^>]+>)\s*,\s*(tensor<[^>]+>)\s*\)\s*->\s*(tensor<[^>]+>)", line)
+    if not sig:
+        return 0.0, 0.0
+    w_dims = _tensor_dims(sig.group(2))
+    out_n, out_b = _tensor_numel_bytes(sig.group(3))
+    _, lhs_b = _tensor_numel_bytes(sig.group(1))
+    _, rhs_b = _tensor_numel_bytes(sig.group(2))
+    # HWIO filter: flops = 2 * out_numel * (H*W*I)
+    k = 1
+    for d in w_dims[:-1]:
+        k *= d
+    return 2.0 * out_n * k, float(lhs_b + rhs_b + out_b)
+
+
+def _region_trip_count(cond_text: str) -> int:
+    """Trip count of a stablehlo.while from its cond region: the largest
+    integer constant compared against the induction variable."""
+    consts = [int(x) for x in re.findall(r"dense<(\d+)>\s*:\s*tensor<i(?:32|64)>",
+                                         cond_text)]
+    return max(consts) if consts else 1
+
+
+def _split_functions(text: str) -> Dict[str, List[str]]:
+    """MLIR module -> {func_name: body lines} via brace counting."""
+    funcs: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    depth = 0
+    for line in text.splitlines():
+        if cur is None:
+            m = re.search(r"func\.func\s+(?:public\s+|private\s+)?@([\w\.\-]+)",
+                          line)
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                funcs[cur] = []
+                depth = 1
+            continue
+        depth += line.count("{") - line.count("}")
+        if depth <= 0:
+            cur = None
+            continue
+        funcs[cur].append(line)
+    return funcs
+
+
+def _analyze_function(lines: List[str]):
+    """Walk one function body tracking while cond/do regions.
+
+    Returns (flops, dot_bytes, call_edges {callee: total multiplier}) where
+    multipliers are the product of enclosing while trip counts."""
+    flops = 0.0
+    dot_bytes = 0.0
+    edges: Dict[str, float] = {}
+    # region stack: dicts {kind: 'while-cond'|'while-do'|'other', trip, buf}
+    stack: List[dict] = []
+
+    def cur_mult() -> float:
+        m = 1.0
+        for f in stack:
+            if f["kind"] == "while-do":
+                m *= f["trip"]
+        return m
+
+    for line in lines:
+        s = line.strip()
+        # region transitions -------------------------------------------------
+        if s == "cond {" or s.endswith(" cond {"):
+            stack.append({"kind": "while-cond", "trip": 1, "buf": []})
+            continue
+        if stack and stack[-1]["kind"] == "while-cond":
+            if re.match(r"^\}\s*do\s*\{", s):
+                trip = _region_trip_count("\n".join(stack[-1]["buf"]))
+                stack[-1] = {"kind": "while-do", "trip": trip, "buf": []}
+                continue
+            stack[-1]["buf"].append(line)
+            continue
+        opens = s.count("{")
+        closes = s.count("}")
+        if closes > opens and stack:
+            for _ in range(closes - opens):
+                if stack:
+                    stack.pop()
+            continue
+        if opens > closes:
+            for _ in range(opens - closes):
+                stack.append({"kind": "other", "trip": 1, "buf": []})
+            # fall through: the line may also contain an op
+
+        # ops ------------------------------------------------------------------
+        if "stablehlo.dot_general" in s:
+            f, b = _dot_flops(s)
+            flops += f * cur_mult()
+            dot_bytes += b * cur_mult()
+        elif "stablehlo.convolution" in s:
+            f, b = _conv_flops(s)
+            flops += f * cur_mult()
+            dot_bytes += b * cur_mult()
+        m = re.search(r"(?:func\.call|call)\s+@([\w\.\-]+)", s)
+        if m:
+            edges[m.group(1)] = edges.get(m.group(1), 0.0) + cur_mult()
+    return flops, dot_bytes, edges
+
+
+def stablehlo_flops(text: str) -> FlopCount:
+    """Loop-aware FLOP/byte count over a StableHLO module text (global, i.e.
+    pre-partitioning: divide by chips for per-device)."""
+    funcs = _split_functions(text)
+    local: Dict[str, Tuple[float, float, Dict[str, float]]] = {
+        name: _analyze_function(lines) for name, lines in funcs.items()}
+
+    mult: Dict[str, float] = {name: 0.0 for name in funcs}
+    if "main" in mult:
+        mult["main"] = 1.0
+    else:   # fallback: any function never called
+        called = {c for _, (_, _, e) in local.items() for c in e}
+        for name in funcs:
+            if name not in called:
+                mult[name] = 1.0
+
+    # propagate through the (acyclic) call graph to fixed point
+    for _ in range(len(funcs) + 2):
+        changed = False
+        for name, (_, _, edges) in local.items():
+            for callee, w in edges.items():
+                if callee not in mult:
+                    continue
+                contrib = mult[name] * w
+                # accumulate across distinct callers: recompute from scratch
+        # full recompute pass
+        new_mult = {name: 0.0 for name in funcs}
+        if "main" in new_mult:
+            new_mult["main"] = 1.0
+        else:
+            called = {c for _, (_, _, e) in local.items() for c in e}
+            for name in funcs:
+                if name not in called:
+                    new_mult[name] = 1.0
+        for name, (_, _, edges) in local.items():
+            for callee, w in edges.items():
+                if callee in new_mult:
+                    new_mult[callee] += mult[name] * w
+        if new_mult == mult:
+            break
+        mult = new_mult
+
+    total = FlopCount()
+    for name, (f, b, _) in local.items():
+        total.flops += f * mult.get(name, 0.0)
+        total.dot_bytes += b * mult.get(name, 0.0)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Optimized (partitioned) HLO: loop-aware collective bytes
+# ---------------------------------------------------------------------------
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_HLO_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# header like `%name (params...) -> type {` — param tuple types nest parens,
+# so only anchor on the name + opening paren and the trailing `{`.
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(")
+
+
+def _hlo_shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        m = _COMP_HDR_RE.match(line.strip())
+        if m and line.rstrip().endswith("{") and not line.startswith(" "):
+            cur = m.group(1)
+            comps[cur] = []
+        elif cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _line_collective(line: str) -> Optional[Tuple[str, int]]:
+    s = line.strip()
+    m = re.match(r"^(%?[\w\.\-]+)\s*=\s*(.*)$", s)
+    if not m:
+        return None
+    rhs = m.group(2)
+    opm = re.search(r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                    r"collective-permute)(-start|-done)?\(", rhs)
+    if not opm or opm.group(2) == "-done":
+        return None
+    head = rhs[: opm.start()]
+    size = sum(_hlo_shape_bytes(d, dd) for d, dd in _HLO_SHAPE_RE.findall(head))
+    return opm.group(1), size
+
+
+def _comp_trip_count(comp_lines: List[str]) -> int:
+    consts = []
+    for line in comp_lines:
+        for m in re.finditer(r"\bconstant\((\d+)\)", line):
+            consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def collective_bytes_loop_aware(hlo: str) -> Dict[str, float]:
+    comps = _split_computations(hlo)
+
+    # while ops: find (body, condition) computation names per computation
+    calls: Dict[str, List[Tuple[str, str]]] = {c: [] for c in comps}
+    for cname, lines in comps.items():
+        for line in lines:
+            if " while(" in line:
+                bm = re.search(r"body=%?([\w\.\-]+)", line)
+                cm = re.search(r"condition=%?([\w\.\-]+)", line)
+                if bm and cm:
+                    calls[cname].append((bm.group(1), cm.group(1)))
+            # fusion/call computations execute inline with multiplier 1 —
+            # their collectives are hoisted to the caller in optimized HLO,
+            # so we don't recurse into calls here.
+
+    # multipliers: start from entry (the computation named like 'main' or the
+    # one not referenced as body/cond/fusion), propagate through while bodies
+    referenced = set()
+    for cname, lst in calls.items():
+        for b, c in lst:
+            referenced.add(b)
+            referenced.add(c)
+    entry_candidates = [c for c in comps
+                        if c not in referenced and ("main" in c or "entry" in c
+                                                    or c.endswith(".0"))]
+    entries = entry_candidates or [c for c in comps if c not in referenced]
+
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    for e in entries:
+        mult[e] = max(mult.get(e, 0.0), 1.0)
+
+    # BFS through while nesting
+    frontier = list(entries)
+    seen = set(frontier)
+    while frontier:
+        cname = frontier.pop()
+        for body, cond in calls.get(cname, []):
+            trip = _comp_trip_count(comps.get(cond, []))
+            m = mult[cname] * trip
+            if m > mult.get(body, 0.0):
+                mult[body] = m
+                if body in seen:
+                    frontier.append(body)
+            if body not in seen:
+                seen.add(body)
+                frontier.append(body)
+            mult[cond] = max(mult.get(cond, 0.0), mult[cname] * trip)
+
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for cname, lines in comps.items():
+        m = mult.get(cname, 1.0) or 1.0
+        for line in lines:
+            lc = _line_collective(line)
+            if lc:
+                out[lc[0]] += lc[1] * m
+    return out

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Single pod: 16 x 16 = 256 chips, axes (data, model).
+Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model); the ``pod``
+axis doubles as the HI cascade's tier axis (DESIGN.md §2).
+
+Functions, not module-level constants: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = 1
+    for s in shape:
+        need *= s
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"need {need} devices for mesh {shape}, have {len(devices)}; "
+            "run under launch/dryrun.py which forces 512 host devices")
+    return jax.make_mesh(shape, axes, devices=devices[:need])
+
+
+def make_debug_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Tiny mesh over however many real devices exist (tests)."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[: data * model])

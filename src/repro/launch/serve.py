@@ -1,0 +1,70 @@
+"""Serving driver: batched requests through the HI cascade.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+      --requests 32 --batch 8 --theta 0.6
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs.base import HIConfig
+from repro.configs.registry import ARCHS
+from repro.serving.batcher import Batcher, Request
+from repro.serving.engine import build_engine
+
+
+def run(arch: str, *, reduced: bool = True, requests: int = 32, batch: int = 8,
+        theta: float = 0.6, capacity_factor: float = 0.5, seed: int = 0,
+        max_new_tokens: int = 8, metric: str = "max_prob"):
+    cfg = ARCHS[arch]
+    if reduced:
+        cfg = cfg.reduced()
+    if cfg.family in ("encdec", "vlm"):
+        raise SystemExit(f"serve driver covers decoder-only text families; "
+                         f"{cfg.family} is exercised via dryrun + smoke tests")
+    hi = HIConfig(theta=theta, capacity_factor=capacity_factor, metric=metric)
+    engine = build_engine(cfg, hi, max_new_tokens=max_new_tokens, cache_len=64)
+
+    rng = np.random.default_rng(seed)
+    batcher = Batcher(batch_size=batch, buckets=(16, 32))
+    for i in range(requests):
+        plen = int(rng.integers(4, 16))
+        batcher.submit(Request(i, rng.integers(
+            0, cfg.vocab_size, plen).astype(np.int32)))
+
+    t0 = time.time()
+    served = 0
+    while batcher.queue:
+        b = batcher.next_batch()
+        out = engine.serve(b.tokens)
+        served += int((b.request_ids >= 0).sum())
+        print(f"batch: offloaded {int(out['offloaded'].sum())}/{len(b.tokens)} "
+              f"mean_conf {out['confidence'].mean():.3f}")
+    dt = time.time() - t0
+    s = engine.summary()
+    print(f"served {served} requests in {dt:.1f}s | offload_frac "
+          f"{s['offload_frac']:.2%} drop_frac {s['drop_frac']:.2%} | "
+          f"S-tier {s['s_time']:.2f}s L-tier {s['l_time']:.2f}s")
+    return s
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--theta", type=float, default=0.6)
+    ap.add_argument("--capacity-factor", type=float, default=0.5)
+    ap.add_argument("--metric", default="max_prob",
+                    choices=["max_prob", "margin", "entropy"])
+    args = ap.parse_args()
+    run(args.arch, requests=args.requests, batch=args.batch, theta=args.theta,
+        capacity_factor=args.capacity_factor, metric=args.metric)
+
+
+if __name__ == "__main__":
+    main()

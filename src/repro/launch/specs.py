@@ -1,0 +1,340 @@
+"""ShapeDtypeStruct input stand-ins + sharding assembly for every
+(architecture x input shape x mesh) dry-run case.  Zero device allocation."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ENCDEC, VLM, ModelConfig, ShapeConfig,
+                                TrainConfig)
+from repro.models import model_zoo
+from repro.optim import adamw
+from repro.sharding import specs as sh
+
+I32 = jnp.int32
+BF16 = jnp.bfloat16
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def text_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """VLM: the sequence budget is patches + text."""
+    if cfg.family == VLM and shape.mode != "decode":
+        return shape.seq_len - cfg.num_patches
+    return shape.seq_len
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Model inputs as ShapeDtypeStructs (same pattern for real batches)."""
+    b = shape.global_batch
+    tl = text_len(cfg, shape)
+    if shape.mode == "decode":
+        return {"token": sds((b, 1), I32)}
+    batch: Dict[str, Any] = {"tokens": sds((b, tl), I32)}
+    if shape.mode == "train":
+        batch["labels"] = sds((b, tl), I32)
+    if cfg.family == ENCDEC:
+        batch["frames"] = sds((b, cfg.num_audio_frames, cfg.d_model), BF16)
+    if cfg.family == VLM:
+        batch["patches"] = sds((b, cfg.num_patches, cfg.d_model), BF16)
+    return batch
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Any:
+    bspecs = batch_specs(cfg, shape)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, sh.data_spec(mesh, s.shape[0],
+                                                   len(s.shape))), bspecs)
+
+
+def grad_accum_for(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> int:
+    """Microbatch accumulation: keeps saved residuals bounded.  The
+    microbatch size must stay divisible by the batch-sharding axes."""
+    if shape.mode != "train":
+        return 1
+    batch_shards = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            batch_shards *= mesh.shape[a]
+    # rough param count proxy: d_model^2 * layers (+ experts)
+    big = cfg.d_model >= 7000
+    accum = 16 if big else 8
+    while shape.global_batch // accum < batch_shards and accum > 1:
+        accum //= 2
+    return accum
+
+
+def _all_axes_spec(mesh: Mesh, batch: int, ndim: int) -> P:
+    """ZeRO-DP: shard the batch over EVERY mesh axis when it divides."""
+    axes = tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if batch % total == 0:
+        return P(axes, *(None,) * (ndim - 1))
+    return sh.data_spec(mesh, batch, ndim)
+
+
+def make_train_case(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                    *, fsdp: bool = True, variant: str = "baseline"):
+    """Returns (fn, arg_specs, in_shardings, out_shardings).
+
+    Variants (the §Perf hillclimb knobs; see EXPERIMENTS.md):
+      baseline  — 2D TP+FSDP layout, fp32 grad accumulation, full Adam.
+      zero_dp   — ZeRO-style: batch shards over (data x model); weights stay
+                  2D-sharded as storage and are gathered per layer.  Replaces
+                  the per-layer Megatron activation all-reduces with weight
+                  all-gathers: wins whenever params << activations x layers.
+      ep_dp     — expert-parallel only: dense attention/MLP compute is data-
+                  parallel (FSDP storage, no TP all-reduces); experts stay
+                  `model`-sharded via the shard_map dispatch.  grad_accum=1.
+      lean_opt  — Adafactor-style factored second moment + bf16 grad
+                  accumulation (memory-bound configs, e.g. arctic-480b).
+      zero_lean / ep_lean — combinations.
+    """
+    from repro.training import trainer
+
+    zero = variant in ("zero_dp", "zero_lean")
+    epdp = variant in ("ep_dp", "ep_lean")
+    lean = variant in ("lean_opt", "zero_lean", "ep_lean")
+    tcfg = TrainConfig(
+        grad_accum=1 if (zero or epdp) else grad_accum_for(cfg, shape, mesh),
+        bf16_state=True, remat=True,
+        factored_v=lean, accum_dtype="bfloat16" if lean else "float32")
+    params = model_zoo.init_params_spec(cfg, BF16)
+    opt = jax.eval_shape(lambda p: adamw.init_state(p, tcfg), params)
+    batch = batch_specs(cfg, shape)
+
+    p_sh = sh.param_shardings(params, mesh, fsdp=fsdp, tp=not epdp)
+
+    def v_sharding(vtree):
+        is_vleaf = lambda x: isinstance(x, dict) and set(x) == {"vr", "vc"}
+        return jax.tree.map(
+            lambda v, psh: ({"vr": NamedSharding(mesh, P()),
+                             "vc": NamedSharding(mesh, P())}
+                            if isinstance(v, dict) else psh),
+            vtree, p_sh, is_leaf=is_vleaf)
+
+    o_sh = {
+        "m": p_sh, "v": v_sharding(opt["v"]),
+        "step": NamedSharding(mesh, P()),
+    }
+    if zero:
+        b_sh = jax.tree.map(
+            lambda s: NamedSharding(mesh, _all_axes_spec(mesh, s.shape[0],
+                                                         len(s.shape))),
+            batch)
+    else:
+        b_sh = batch_shardings(cfg, shape, mesh)
+    metric_sh = NamedSharding(mesh, P())
+
+    fn = trainer.make_train_step(cfg, tcfg)
+    in_shardings = (p_sh, o_sh, b_sh)
+    out_shardings = (p_sh, o_sh,
+                     {"loss": metric_sh, "nll": metric_sh, "aux": metric_sh,
+                      "lr": metric_sh, "grad_norm": metric_sh})
+    return fn, (params, opt, batch), in_shardings, out_shardings
+
+
+def make_prefill_case(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                      *, fsdp: Optional[bool] = None):
+    """Prefill lowers the full forward (logit computation over the prompt)."""
+    if fsdp is None:
+        fsdp = serving_fsdp(cfg, mesh)
+    params = model_zoo.init_params_spec(cfg, BF16)
+    batch = batch_specs(cfg, shape)
+    p_sh = sh.param_shardings(params, mesh, fsdp=fsdp)
+    b_sh = batch_shardings(cfg, shape, mesh)
+    batch_ok = shape.global_batch % _nbatch(mesh) == 0
+    logits_sh = NamedSharding(
+        mesh, P(sh.batch_axes(mesh) if batch_ok else None, None, None))
+
+    def fn(params, batch):
+        # production prefill: only the last position's logits are needed
+        logits, _ = model_zoo.forward(params, cfg, batch, last_only=True)
+        return logits
+
+    return fn, (params, batch), (p_sh, b_sh), logits_sh
+
+
+def serving_fsdp(cfg: ModelConfig, mesh: Mesh, threshold_gb: float = 8.0) -> bool:
+    """Serving wants TP-only weights (no per-step FSDP all-gathers) unless the
+    TP-sharded weights alone would blow the HBM budget (arctic-480b)."""
+    import math
+    params = model_zoo.init_params_spec(cfg, BF16)
+    total_bytes = sum(2 * math.prod(p.shape)      # python ints: no overflow
+                      for p in jax.tree.leaves(params))
+    per_chip = total_bytes / mesh.shape["model"]
+    return per_chip > threshold_gb * 1e9
+
+
+def make_decode_case(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                     *, fsdp: Optional[bool] = None):
+    """serve_step: ONE new token against a seq_len KV cache."""
+    if fsdp is None:
+        fsdp = serving_fsdp(cfg, mesh)
+    params = model_zoo.init_params_spec(cfg, BF16)
+    cache = model_zoo.cache_spec(cfg, shape.global_batch, shape.seq_len)
+    token = sds((shape.global_batch, 1), I32)
+
+    p_sh = sh.param_shardings(params, mesh, fsdp=fsdp)
+    c_specs = sh.cache_specs(cfg, mesh, shape)
+    c_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs)
+    batch_ok = shape.global_batch % _nbatch(mesh) == 0
+    t_sh = NamedSharding(mesh, P(sh.batch_axes(mesh) if batch_ok else None,
+                                 None))
+    logits_sh = NamedSharding(mesh, P(sh.batch_axes(mesh) if batch_ok
+                                      else None, None))
+
+    def fn(params, token, cache):
+        return model_zoo.decode_step(params, cfg, token, cache)
+
+    return fn, (params, token, cache), (p_sh, t_sh, c_sh), (logits_sh, c_sh)
+
+
+def make_split_decode_case(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """serve_step with ring-buffered local caches (sliding-window archs).
+
+    The §Perf split-cache iteration: local layers keep only W positions, so
+    both resident cache HBM and per-step cache reads drop by ~S/W on the
+    local fraction of layers."""
+    from repro.models import transformer
+
+    if not cfg.sliding_window:
+        raise ValueError("split cache needs a sliding-window arch")
+    params = model_zoo.init_params_spec(cfg, BF16)
+    cache = transformer.split_cache_spec(cfg, shape.global_batch,
+                                         shape.seq_len)
+    token = sds((shape.global_batch, 1), I32)
+
+    fsdp = serving_fsdp(cfg, mesh)
+    p_sh = sh.param_shardings(params, mesh, fsdp=fsdp)
+    batch_ok = shape.global_batch % _nbatch(mesh) == 0
+    baxes = sh.batch_axes(mesh) if batch_ok else None
+
+    def cache_rule(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name == "pos":
+            return P()
+        if name.startswith("local"):        # (n_local, B, W, K, Dh)
+            return P(None, baxes, None, None, None)
+        # global stacks: sequence-parallel like the uniform cache
+        s_dim = leaf.shape[2]
+        if batch_ok:
+            s_ax = "model" if s_dim % mesh.shape["model"] == 0 else None
+            return P(None, baxes, s_ax, None, None)
+        flat = tuple(a for a in ("data", "model") if a in mesh.shape)
+        tot = 1
+        for a in flat:
+            tot *= mesh.shape[a]
+        return P(None, None, flat if s_dim % tot == 0 else "data",
+                 None, None)
+
+    c_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        jax.tree_util.tree_map_with_path(cache_rule, cache))
+    t_sh = NamedSharding(mesh, P(baxes, None))
+    logits_sh = NamedSharding(mesh, P(baxes, None))
+
+    def fn(params, token, cache):
+        return transformer.decode_step_split(params, cfg, token, cache)
+
+    return fn, (params, token, cache), (p_sh, t_sh, c_sh), (logits_sh, c_sh)
+
+
+def make_hi_decode_case(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
+                        capacity_factor: float = 0.5, theta: float = 0.607,
+                        s_scale: int = 4):
+    """The paper's technique as ONE lowered program: HI cascade serve_step.
+
+    S-tier (cfg.s_variant) decodes every request; the fused confidence gate +
+    static-capacity router escalate the complex subset (capacity =
+    capacity_factor x batch) to the L-tier (the full assigned config), whose
+    KV cache covers exactly `capacity` concurrent complex streams.  The
+    router gather IS the paper's ED->ES offload link — its collective bytes
+    are the measured beta.
+    """
+    from repro.core import router as router_mod
+    from repro.core.confidence import confidence as conf_fn
+
+    s_cfg = cfg.s_variant(s_scale)
+    b = shape.global_batch
+    cap = router_mod.capacity_for(b, capacity_factor)
+    # keep the complex sub-batch shardable over the batch axes
+    nb = _nbatch(mesh)
+    if b % nb == 0 and cap % nb:
+        cap = max(nb, (cap // nb) * nb)
+
+    s_params = model_zoo.init_params_spec(s_cfg, BF16)
+    l_params = model_zoo.init_params_spec(cfg, BF16)
+    s_cache = model_zoo.cache_spec(s_cfg, b, shape.seq_len)
+    l_cache = model_zoo.cache_spec(cfg, cap, shape.seq_len)
+    token = sds((b, 1), I32)
+
+    fsdp_l = serving_fsdp(cfg, mesh)
+    sp_sh = sh.param_shardings(s_params, mesh, fsdp=False)
+    lp_sh = sh.param_shardings(l_params, mesh, fsdp=fsdp_l)
+    sc_specs = sh.cache_specs(s_cfg, mesh, shape)
+    import dataclasses as _dc
+    cap_shape = _dc.replace(shape, global_batch=cap)
+    lc_specs = sh.cache_specs(cfg, mesh, cap_shape)
+    sc_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), sc_specs)
+    lc_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), lc_specs)
+    batch_ok = b % nb == 0
+    t_sh = NamedSharding(mesh, P(sh.batch_axes(mesh) if batch_ok else None,
+                                 None))
+    logits_sh = NamedSharding(mesh, P(sh.batch_axes(mesh) if batch_ok
+                                      else None, None))
+
+    def hi_serve_step(s_params, l_params, token, s_cache, l_cache):
+        s_logits, s_cache = model_zoo.decode_step(s_params, s_cfg, token,
+                                                  s_cache)
+        conf = conf_fn(s_logits, "max_prob")
+        offload = conf < theta
+        decision = router_mod.route(offload, conf, cap)
+        # the ED->ES link: gather the complex sub-batch
+        l_token = token[decision.indices]
+        l_logits, l_cache = model_zoo.decode_step(l_params, cfg, l_token,
+                                                  l_cache)
+        merged = router_mod.scatter_merge(s_logits, l_logits, decision)
+        return merged, s_cache, l_cache, decision.served_remote
+
+    args = (s_params, l_params, token, s_cache, l_cache)
+    in_sh = (sp_sh, lp_sh, t_sh, sc_sh, lc_sh)
+    out_sh = (logits_sh, sc_sh, lc_sh,
+              NamedSharding(mesh, P(sh.batch_axes(mesh) if batch_ok
+                                    else None)))
+    return hi_serve_step, args, in_sh, out_sh
+
+
+def _nbatch(mesh: Mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            n *= mesh.shape[a]
+    return n
+
+
+def make_case(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+              variant: str = "baseline"):
+    if shape.mode == "train":
+        return make_train_case(cfg, shape, mesh, fsdp=True, variant=variant)
+    if shape.mode == "prefill":
+        return make_prefill_case(cfg, shape, mesh)
+    if variant == "split_cache":
+        return make_split_decode_case(cfg, shape, mesh)
+    return make_decode_case(cfg, shape, mesh)
+
+
+def donate_for(shape: ShapeConfig) -> tuple:
+    """Donation: train aliases params+opt state; decode aliases the cache."""
+    if shape.mode == "train":
+        return (0, 1)
+    if shape.mode == "decode":
+        return (2,)
+    return ()

@@ -1,0 +1,87 @@
+"""Training driver.
+
+On real hardware this launches the pjit train step over the production mesh;
+on this CPU container it runs reduced configs end-to-end (the same code path,
+1-device mesh) — used by examples/quickstart.py and the integration tests.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --reduced \
+      --steps 50 --batch 8 --seq 64
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import ARCHS
+from repro.data import tokens as token_data
+from repro.models import model_zoo
+from repro.optim import adamw
+from repro.training import trainer
+from repro.checkpoint import io as ckpt_io
+
+
+def run(arch: str, *, reduced: bool = True, steps: int = 50, batch: int = 8,
+        seq: int = 64, lr: float = 1e-3, grad_accum: int = 1,
+        ckpt_dir: str = "", log_every: int = 10, seed: int = 0):
+    cfg = ARCHS[arch]
+    if reduced:
+        cfg = cfg.reduced()
+    tcfg = TrainConfig(lr=lr, total_steps=steps, warmup_steps=max(1, steps // 10),
+                       grad_accum=grad_accum, bf16_state=False, remat=False)
+    rng = jax.random.PRNGKey(seed)
+    params = model_zoo.init_params(rng, cfg)
+    opt = adamw.init_state(params, tcfg)
+    step_fn = jax.jit(trainer.make_train_step(cfg, tcfg))
+
+    losses = []
+    t0 = time.time()
+    for i, batch_np in enumerate(token_data.lm_batches(cfg.vocab_size, batch,
+                                                       seq, steps, seed)):
+        b = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        if cfg.family == "encdec":
+            b["frames"] = jax.random.normal(
+                jax.random.PRNGKey(i), (batch, cfg.num_audio_frames,
+                                        cfg.d_model))
+        if cfg.family == "vlm":
+            b["patches"] = jax.random.normal(
+                jax.random.PRNGKey(i), (batch, cfg.num_patches, cfg.d_model))
+        params, opt, metrics = step_fn(params, opt, b)
+        losses.append(float(metrics["loss"]))
+        if i % log_every == 0:
+            print(f"step {i:4d} loss {losses[-1]:.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):.2f}")
+    dt = time.time() - t0
+    print(f"trained {steps} steps in {dt:.1f}s "
+          f"({steps * batch * seq / dt:.0f} tok/s); "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    if ckpt_dir:
+        ckpt_io.save(ckpt_dir, params, step=steps)
+        print("saved checkpoint to", ckpt_dir)
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+    run(args.arch, reduced=args.reduced, steps=args.steps, batch=args.batch,
+        seq=args.seq, lr=args.lr, grad_accum=args.grad_accum,
+        ckpt_dir=args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""CNN classifiers for the paper's three use cases (§3–§5).
+
+* ``SML_CIFAR``  — the paper's 5-layer tinyML CNN: conv → maxpool → flatten →
+  dense → dense (§4, 0.45 MB TFLite, 62.58% on CIFAR-10).
+* ``LML_CIFAR``  — the EfficientNet stand-in L-ML (deeper conv stack; the
+  paper uses EfficientNet at 95%).
+* ``FAULT_CNN``  — the 8-layer CNN of [38] for CWRU fault diagnosis (§3),
+  consuming 64x64 grey images built from 4096-sample vibration windows.
+* ``SML_BINARY`` — the dog/not-dog relevance filter (§5, 0.23 MB, sigmoid).
+
+All are pure-JAX (lax.conv_general_dilated, NHWC) with pytree params.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    in_shape: Tuple[int, int, int]          # (H, W, C)
+    conv_channels: Sequence[int]            # one conv per entry
+    pool_every: int                          # maxpool 2x2 after every k convs
+    dense_sizes: Sequence[int]               # hidden dense layers
+    num_classes: int                          # 1 => binary sigmoid head
+    global_pool: bool = False                 # global max-pool before dense
+                                              # (translation-invariant head —
+                                              # what EfficientNet-class models
+                                              # have and the tinyML S-ML lacks)
+
+
+SML_CIFAR = CNNConfig("sml-cifar", (32, 32, 3), (32,), 1, (64,), 10)
+LML_CIFAR = CNNConfig("lml-cifar", (32, 32, 3), (32, 64, 64, 128, 128), 2,
+                      (256,), 10, global_pool=True)
+FAULT_CNN = CNNConfig("fault-cnn", (64, 64, 1), (16, 32, 32, 64, 64, 64), 2,
+                      (128,), 10, global_pool=True)
+SML_BINARY = CNNConfig("sml-binary", (32, 32, 3), (32,), 1, (32,), 1)
+
+
+def init_cnn(rng, cfg: CNNConfig, dtype=jnp.float32) -> Params:
+    params: Params = {"convs": [], "dense": []}
+    keys = jax.random.split(rng, len(cfg.conv_channels) + len(cfg.dense_sizes) + 1)
+    c_in = cfg.in_shape[2]
+    h, w = cfg.in_shape[:2]
+    ki = 0
+    for i, c_out in enumerate(cfg.conv_channels):
+        scale = 1.0 / math.sqrt(3 * 3 * c_in)
+        params["convs"].append({
+            "w": (jax.random.normal(keys[ki], (3, 3, c_in, c_out)) * scale
+                  ).astype(dtype),
+            "b": jnp.zeros((c_out,), dtype),
+        })
+        ki += 1
+        c_in = c_out
+        if (i + 1) % cfg.pool_every == 0:
+            h, w = h // 2, w // 2
+    flat = c_in if cfg.global_pool else h * w * c_in
+    d_in = flat
+    for d_out in cfg.dense_sizes:
+        scale = 1.0 / math.sqrt(d_in)
+        params["dense"].append({
+            "w": (jax.random.normal(keys[ki], (d_in, d_out)) * scale).astype(dtype),
+            "b": jnp.zeros((d_out,), dtype),
+        })
+        ki += 1
+        d_in = d_out
+    scale = 1.0 / math.sqrt(d_in)
+    params["head"] = {
+        "w": (jax.random.normal(keys[ki], (d_in, cfg.num_classes)) * scale
+              ).astype(dtype),
+        "b": jnp.zeros((cfg.num_classes,), dtype),
+    }
+    return params
+
+
+def apply_cnn(params: Params, cfg: CNNConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, H, W, C) -> logits (B, num_classes) fp32."""
+    for i, cp in enumerate(params["convs"]):
+        x = lax.conv_general_dilated(
+            x, cp["w"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.nn.relu(x + cp["b"])
+        if (i + 1) % cfg.pool_every == 0:
+            x = lax.reduce_window(x, -jnp.inf, lax.max, (1, 2, 2, 1),
+                                  (1, 2, 2, 1), "VALID")
+    if cfg.global_pool:
+        x = x.max(axis=(1, 2))
+    x = x.reshape(x.shape[0], -1)
+    for dp in params["dense"]:
+        x = jax.nn.relu(x @ dp["w"] + dp["b"])
+    return (x @ params["head"]["w"] + params["head"]["b"]).astype(jnp.float32)
+
+
+def num_params(params: Params) -> int:
+    return sum(p.size for p in jax.tree.leaves(params))
+
+
+def model_size_mb(params: Params, bytes_per_param: int = 1) -> float:
+    """Size if quantised to int8 (the paper's TFLite models are quantised)."""
+    return num_params(params) * bytes_per_param / 1e6

@@ -1,0 +1,144 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + a SHARED attention block applied
+every ``shared_attn_every`` layers [arXiv:2411.15242].
+
+Structured as ``G = num_layers // shared_attn_every`` groups; each group is an
+inner scan over its mamba layers followed by the shared attention block (one
+set of weights, applied G times — Zamba2's parameter-sharing trick).  The
+outer scan carries the per-group KV-cache slots for decode.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2
+from repro.sharding import act
+
+Params = Dict[str, Any]
+
+
+def _num_groups(cfg: ModelConfig) -> int:
+    k = cfg.shared_attn_every
+    if cfg.num_layers % k:
+        raise ValueError(f"num_layers {cfg.num_layers} must divide by "
+                         f"shared_attn_every {k}")
+    return cfg.num_layers // k
+
+
+def init_model(rng, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(rng, 5)
+    layer_rngs = jax.random.split(ks[0], cfg.num_layers)
+    stacked = jax.vmap(lambda r: mamba2.init_mamba_block(r, cfg, dtype))(layer_rngs)
+    g, k = _num_groups(cfg), cfg.shared_attn_every
+    # reshape the layer stack to (G, k, ...) for the nested scan
+    stacked = jax.tree.map(lambda a: a.reshape(g, k, *a.shape[1:]), stacked)
+    shared = {
+        "ln1": L.rmsnorm_init(cfg.d_model, dtype),
+        "attn": L.attention_init(ks[1], cfg.d_model, cfg.num_heads,
+                                 cfg.num_kv_heads, cfg.resolved_head_dim,
+                                 dtype=dtype),
+        "ln2": L.rmsnorm_init(cfg.d_model, dtype),
+        "mlp": L.swiglu_init(ks[2], cfg.d_model, cfg.d_ff, dtype),
+    }
+    return {
+        "embed": L.embed_init(ks[3], cfg.vocab_size, cfg.d_model, dtype),
+        "layers": stacked,
+        "shared_attn": shared,
+        "final_norm": L.rmsnorm_init(cfg.d_model, dtype),
+        "lm_head": L.dense_init(ks[4], cfg.d_model, cfg.vocab_size, dtype),
+    }
+
+
+def _shared_block(sp: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    a = L.attention_forward(sp["attn"], L.rmsnorm(sp["ln1"], x, cfg.norm_eps),
+                            num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
+                            head_dim=cfg.resolved_head_dim,
+                            rope_theta=cfg.rope_theta)
+    x = x + a
+    return x + L.swiglu(sp["mlp"], L.rmsnorm(sp["ln2"], x, cfg.norm_eps))
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jnp.ndarray, *,
+            remat: bool = False, use_kernel: bool = False,
+            last_only: bool = False) -> jnp.ndarray:
+    h = params["embed"][tokens]
+    sp = params["shared_attn"]
+
+    def inner(carry, lp):
+        x = act.shard_hidden(carry)
+        y = mamba2.mamba_block(lp, cfg, L.rmsnorm(lp["ln"], x, cfg.norm_eps),
+                               use_kernel=use_kernel)
+        return x + y, None
+
+    def outer(carry, group_params):
+        x = carry
+        x, _ = lax.scan(inner, x, group_params)
+        x = _shared_block(sp, cfg, x)
+        return act.shard_hidden(x), None
+
+    if remat:
+        outer = jax.checkpoint(outer, prevent_cse=False)
+    h, _ = lax.scan(outer, act.shard_hidden(h), params["layers"])
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    if last_only:
+        h = h[:, -1:]
+    return act.shard_logits((h @ params["lm_head"]).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    g = _num_groups(cfg)
+    ssm = mamba2.init_cache(cfg, batch, seq_len, dtype)
+    kv_shape = (g, batch, seq_len, cfg.num_kv_heads, cfg.resolved_head_dim)
+    gk = _num_groups(cfg), cfg.shared_attn_every
+    ssm_state = ssm["state"].reshape(gk[0], gk[1], *ssm["state"].shape[1:])
+    ssm_conv = ssm["conv"].reshape(gk[0], gk[1], *ssm["conv"].shape[1:])
+    return {
+        "state": ssm_state, "conv": ssm_conv,
+        "k": jnp.zeros(kv_shape, dtype), "v": jnp.zeros(kv_shape, dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
+                cache: Params) -> Tuple[jnp.ndarray, Params]:
+    h = params["embed"][token]
+    sp = params["shared_attn"]
+    pos = cache["pos"]
+
+    def inner(carry, xs):
+        x = carry
+        lp, st, cw = xs
+        y, st, cw = mamba2.mamba_block_step(
+            lp, cfg, L.rmsnorm(lp["ln"], x, cfg.norm_eps), st, cw)
+        return x + y, (st, cw)
+
+    def outer(carry, xs):
+        x = carry
+        gp, st_g, cw_g, ck, cv = xs
+        x, (st_g, cw_g) = lax.scan(inner, x, (gp, st_g, cw_g))
+        a, ck, cv = L.attention_decode(sp["attn"],
+                                       L.rmsnorm(sp["ln1"], x, cfg.norm_eps),
+                                       ck, cv, pos,
+                                       num_heads=cfg.num_heads,
+                                       num_kv=cfg.num_kv_heads,
+                                       head_dim=cfg.resolved_head_dim,
+                                       rope_theta=cfg.rope_theta)
+        x = x + a
+        x = x + L.swiglu(sp["mlp"], L.rmsnorm(sp["ln2"], x, cfg.norm_eps))
+        return x, (st_g, cw_g, ck, cv)
+
+    h, (ns, ncw, nk, nv) = lax.scan(
+        outer, h, (params["layers"], cache["state"], cache["conv"],
+                   cache["k"], cache["v"]))
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = (h[:, 0, :] @ params["lm_head"]).astype(jnp.float32)
+    return logits, {"state": ns, "conv": ncw, "k": nk, "v": nv, "pos": pos + 1}

@@ -1,0 +1,327 @@
+"""Shared neural-net building blocks (pure JAX, pytree params).
+
+Conventions
+-----------
+* hidden states ``(B, S, D)``; attention heads ``(B, S, H, Dh)``.
+* params are nested dicts of ``jnp.ndarray``; per-layer stacks add a leading
+  ``L`` axis and are consumed by ``lax.scan`` (compile-time: one layer body).
+* everything is differentiable and jit/pjit-safe (static shapes only).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = Dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# initialisers
+# ---------------------------------------------------------------------------
+
+def dense_init(rng, in_dim: int, out_dim: int, dtype=jnp.float32) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(rng, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def embed_init(rng, vocab: int, dim: int, dtype=jnp.float32) -> jnp.ndarray:
+    return (jax.random.normal(rng, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(dim: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, Dh); positions: (S,) or (B, S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                      # (Dh/2,)
+    if positions.ndim == 1:
+        angles = positions[:, None].astype(jnp.float32) * freqs[None, :]   # (S, Dh/2)
+        angles = angles[None, :, None, :]                                   # (1,S,1,Dh/2)
+    else:
+        angles = positions[..., None].astype(jnp.float32) * freqs           # (B,S,Dh/2)
+        angles = angles[:, :, None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attention_init(rng, d_model: int, num_heads: int, num_kv: int, head_dim: int,
+                   *, bias: bool = False, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(rng, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], d_model, num_heads * head_dim, dtype),
+        "wk": dense_init(ks[1], d_model, num_kv * head_dim, dtype),
+        "wv": dense_init(ks[2], d_model, num_kv * head_dim, dtype),
+        "wo": dense_init(ks[3], num_heads * head_dim, d_model, dtype),
+    }
+    if bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((num_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((num_kv * head_dim,), dtype)
+    return p
+
+
+def _qkv(params: Params, x: jnp.ndarray, num_heads: int, num_kv: int, head_dim: int):
+    b, s, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    return (q.reshape(b, s, num_heads, head_dim),
+            k.reshape(b, s, num_kv, head_dim),
+            v.reshape(b, s, num_kv, head_dim))
+
+
+def _sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+          mask: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """q: (B,Sq,H,Dh)  k,v: (B,Sk,K,Dh)  GQA via head grouping.
+
+    mask: broadcastable to (B, H, Sq, Sk), True = attend.
+    """
+    b, sq, h, dh = q.shape
+    kheads = k.shape[2]
+    groups = h // kheads
+    # matmuls run in the cache dtype with fp32 accumulation
+    # (preferred_element_type) — never materialise an upcast copy of the
+    # K/V cache (for a 32k cache that copy would double decode HBM).
+    qg = q.reshape(b, sq, kheads, groups, dh).astype(k.dtype)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) / math.sqrt(dh)
+    if mask is not None:
+        if mask.ndim == 3:                    # (B|1, Sq, Sk)
+            m = mask[:, None, None, :, :]
+        else:                                  # (B|1, H, Sq, Sk)
+            m = mask.reshape(mask.shape[0], kheads, groups, *mask.shape[-2:])
+        scores = jnp.where(m, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def causal_window_mask(sq: int, sk: int, *, q_offset: int = 0,
+                       window: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """(1, Sq, Sk) boolean mask: causal, optionally sliding-window.
+
+    ``window`` may be a traced scalar (enables gemma3's per-layer local/global
+    switch inside a single scanned layer body without lax.cond).
+    """
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(sk)[None, :]
+    mask = kpos <= qpos
+    if window is not None:
+        mask = mask & (qpos - kpos < window)
+    return mask[None]
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      q_chunk: int, causal: bool,
+                      window: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Query-chunked attention: bounds the score buffer to (B,H,qc,Sk).
+
+    Each query block sees its complete key row, so plain (not online) softmax
+    is exact.  Memory per block: B*H*qc*Sk fp32 instead of B*H*Sq*Sk.
+    """
+    b, sq, h, dh = q.shape
+    if sq % q_chunk:
+        raise ValueError(f"seq {sq} not divisible by q_chunk {q_chunk}")
+    nblk = sq // q_chunk
+    qb = q.reshape(b, nblk, q_chunk, h, dh).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, args):
+        i, qi = args
+        mask = None
+        if causal:
+            mask = causal_window_mask(q_chunk, k.shape[1],
+                                      q_offset=i * q_chunk, window=window)
+        out = _sdpa(qi, k, v, mask)
+        return carry, out
+
+    _, outs = lax.scan(body, None, (jnp.arange(nblk), qb))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, dh)
+
+
+def attention_forward(params: Params, x: jnp.ndarray, *, num_heads: int,
+                      num_kv: int, head_dim: int, rope_theta: float,
+                      causal: bool = True,
+                      window: Optional[jnp.ndarray] = None,
+                      positions: Optional[jnp.ndarray] = None,
+                      q_chunk: int = 512) -> jnp.ndarray:
+    """Full-sequence self-attention (train / prefill)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(params, x, num_heads, num_kv, head_dim)
+    if rope_theta > 0:
+        pos = positions if positions is not None else jnp.arange(s)
+        q = apply_rope(q, pos, rope_theta)
+        k = apply_rope(k, pos, rope_theta)
+    if s > q_chunk and s % q_chunk == 0:
+        out = chunked_attention(q, k, v, q_chunk=q_chunk, causal=causal,
+                                window=window)
+    else:
+        mask = causal_window_mask(s, s, window=window) if causal else None
+        out = _sdpa(q, k, v, mask)
+    return out.reshape(b, s, num_heads * head_dim) @ params["wo"]
+
+
+def _decode_attn_streamed(q: jnp.ndarray, cache_k: jnp.ndarray,
+                          cache_v: jnp.ndarray, valid: jnp.ndarray,
+                          block_s: int) -> jnp.ndarray:
+    """Online-softmax decode attention streaming the cache in S blocks —
+    the jnp mirror of kernels/decode_attention.py.  Bounds the working set
+    to one (B, block_s, K, D) tile (the full-cache _sdpa path would force an
+    upcast copy of the entire cache)."""
+    b, _, h, d = q.shape
+    s, kh = cache_k.shape[1], cache_k.shape[2]
+    g = h // kh
+    nblk = s // block_s
+    qg = (q.reshape(b, 1, kh, g, d).astype(cache_k.dtype)
+          / math.sqrt(d))
+
+    def body(carry, i):
+        m, l, acc = carry
+        sl = i * block_s
+        kb = lax.dynamic_slice_in_dim(cache_k, sl, block_s, axis=1)
+        vb = lax.dynamic_slice_in_dim(cache_v, sl, block_s, axis=1)
+        vm = lax.dynamic_slice_in_dim(valid, sl, block_s, axis=0)
+        scores = jnp.einsum("bqkgd,bskd->bkgs", qg, kb,
+                            preferred_element_type=jnp.float32)
+        scores = jnp.where(vm[None, None, None, :], scores, -1e30)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+        p = jnp.exp(scores - m_new[..., None]) \
+            * vm[None, None, None, :].astype(jnp.float32)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgs,bskd->bkgd", p.astype(vb.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, kh, g), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, kh, g), jnp.float32)
+    a0 = jnp.zeros((b, kh, g, d), jnp.float32)
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0), jnp.arange(nblk))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# stream the cache for long contexts; below this, one full-row _sdpa is fine
+_DECODE_STREAM_THRESHOLD = 8192
+_DECODE_BLOCK_S = 2048
+
+
+def _no_mesh() -> bool:
+    from repro.sharding import act
+    return act.current_mesh() is None
+
+
+def attention_decode(params: Params, x: jnp.ndarray, cache_k: jnp.ndarray,
+                     cache_v: jnp.ndarray, pos: jnp.ndarray, *, num_heads: int,
+                     num_kv: int, head_dim: int, rope_theta: float,
+                     window: Optional[jnp.ndarray] = None,
+                     use_kernel: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode.  x: (B, 1, D); cache_k/v: (B, S, K, Dh); pos: scalar.
+
+    Returns (out (B,1,D), new_cache_k, new_cache_v).
+    """
+    b = x.shape[0]
+    q, k, v = _qkv(params, x, num_heads, num_kv, head_dim)
+    if rope_theta > 0:
+        p1 = jnp.full((1,), pos, dtype=jnp.int32)
+        q = apply_rope(q, p1, rope_theta)
+        k = apply_rope(k, p1, rope_theta)
+    cache_k = lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                       (0, pos, 0, 0))
+    cache_v = lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                       (0, pos, 0, 0))
+    s = cache_k.shape[1]
+    kpos = jnp.arange(s)
+    valid = kpos <= pos
+    if window is not None:
+        valid = valid & (pos - kpos < window)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        out = kops.decode_attention(q, cache_k, cache_v, valid)
+    elif s >= _DECODE_STREAM_THRESHOLD and s % _DECODE_BLOCK_S == 0 \
+            and _no_mesh():
+        # streaming bounds the working set for LOCAL serving; under a mesh
+        # the cache is sequence-sharded and block-slicing it would all-gather
+        # (measured +129 GB/step on llava decode) — GSPMD's partial-softmax
+        # over the sharded S dim is the right plan there.
+        out = _decode_attn_streamed(q, cache_k, cache_v, valid,
+                                    _DECODE_BLOCK_S)
+    else:
+        mask = valid[None, None, :]            # (1, 1, S) -> broadcast (B,Sq,Sk)
+        out = _sdpa(q, cache_k, cache_v, mask)
+    out = out.reshape(b, 1, num_heads * head_dim) @ params["wo"]
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def swiglu_init(rng, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(rng, 3)
+    return {
+        "wi": dense_init(ks[0], d_model, d_ff, dtype),
+        "wg": dense_init(ks[1], d_model, d_ff, dtype),
+        "wo": dense_init(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def swiglu(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return (jax.nn.silu(x @ params["wg"]) * (x @ params["wi"])) @ params["wo"]
+
+
+def gelu_mlp_init(rng, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(rng, 2)
+    return {"wi": dense_init(ks[0], d_model, d_ff, dtype),
+            "wo": dense_init(ks[1], d_ff, d_model, dtype),
+            "bi": jnp.zeros((d_ff,), dtype), "bo": jnp.zeros((d_model,), dtype)}
+
+
+def gelu_mlp(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.gelu(x @ params["wi"] + params["bi"]) @ params["wo"] + params["bo"]

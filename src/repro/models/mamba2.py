@@ -1,0 +1,278 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Train/prefill use the chunked SSD algorithm: quadratic attention-like compute
+inside fixed-size chunks + a linear inter-chunk state recurrence (lax.scan).
+Decode is the O(1)-per-token recurrent update on the cached SSM state.
+
+``kernels/ssd_scan.py`` provides the Pallas TPU kernel for the per-chunk
+compute; this module is also its pure-jnp oracle entry point.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding import act
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# SSD core (chunked) — pure jnp
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                B: jnp.ndarray, C: jnp.ndarray, chunk: int,
+                init_state: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD over a sequence.
+
+    x:  (b, l, h, p)   per-head inputs
+    dt: (b, l, h)      positive step sizes (softplus already applied)
+    A:  (h,)           negative decay rates
+    B:  (b, l, n)      input projections (single group)
+    C:  (b, l, n)      output projections (single group)
+    Returns (y (b,l,h,p), final_state (b,h,p,n)).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, l)
+    orig_l = l
+    if l % chunk:
+        # pad with dt=0 steps: decay=1 and dx=0, so padding is a no-op on state
+        pad = chunk - l % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        l = l + pad
+    nc = l // chunk
+
+    f32 = jnp.float32
+    a = (dt.astype(f32) * A.astype(f32)).reshape(b, nc, chunk, h)        # log-decay
+    dx = (x.astype(f32) * dt.astype(f32)[..., None]).reshape(b, nc, chunk, h, p)
+    Bc = B.astype(f32).reshape(b, nc, chunk, n)
+    Cc = C.astype(f32).reshape(b, nc, chunk, n)
+
+    a_cs = jnp.cumsum(a, axis=2)                                         # (b,nc,q,h)
+
+    # --- intra-chunk (diagonal blocks): attention-like with decay mask
+    # L[i, j] = exp(a_cs[i] - a_cs[j]) for i >= j else 0
+    decay = jnp.exp(a_cs[:, :, :, None, :] - a_cs[:, :, None, :, :])     # (b,nc,i,j,h)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tri[None, None, :, :, None], decay, 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)                           # (b,nc,i,j)
+    y_diag = jnp.einsum("bcij,bcijh,bcjhp->bcihp", cb, decay, dx)
+
+    # --- chunk summary states: S_c = sum_j exp(a_end - a_cs[j]) dx_j B_j^T
+    decay_to_end = jnp.exp(a_cs[:, :, -1:, :] - a_cs)                    # (b,nc,q,h)
+    S = jnp.einsum("bcjh,bcjhp,bcjn->bchpn", decay_to_end, dx, Bc)
+
+    # --- inter-chunk recurrence
+    g = jnp.exp(a_cs[:, :, -1, :])                                       # (b,nc,h)
+    h0 = jnp.zeros((b, h, p, n), f32) if init_state is None \
+        else init_state.astype(f32)
+
+    def step(hprev, xs):
+        g_c, S_c = xs
+        hnew = g_c[:, :, None, None] * hprev + S_c
+        return hnew, hprev
+
+    hT, h_prevs = lax.scan(step, h0, (g.transpose(1, 0, 2), S.transpose(1, 0, 2, 3, 4)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                           # (b,nc,h,p,n)
+
+    # --- inter-chunk contribution: y_off[i] = exp(a_cs[i]) C_i . h_prev
+    y_off = jnp.einsum("bcih,bcin,bchpn->bcihp",
+                       jnp.exp(a_cs), Cc, h_prevs)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)[:, :orig_l]
+    return y.astype(x.dtype), hT
+
+
+def ssd_recurrent_step(state: jnp.ndarray, x_t: jnp.ndarray, dt_t: jnp.ndarray,
+                       A: jnp.ndarray, B_t: jnp.ndarray, C_t: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One decode step.
+
+    state: (b, h, p, n); x_t: (b, h, p); dt_t: (b, h); B_t/C_t: (b, n).
+    Returns (y_t (b, h, p), new_state).
+    """
+    f32 = jnp.float32
+    da = jnp.exp(dt_t.astype(f32) * A.astype(f32))                       # (b,h)
+    dx = x_t.astype(f32) * dt_t.astype(f32)[..., None]                   # (b,h,p)
+    upd = jnp.einsum("bhp,bn->bhpn", dx, B_t.astype(f32))
+    new_state = da[:, :, None, None] * state.astype(f32) + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C_t.astype(f32))
+    return y.astype(x_t.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (width W, per-channel)
+# ---------------------------------------------------------------------------
+
+def causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, L, C); w: (W, C); b: (C,).  Shift-and-sum (W is tiny)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    return out + b
+
+
+def causal_conv_step(window: jnp.ndarray, x_t: jnp.ndarray, w: jnp.ndarray,
+                     b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """window: (B, W-1, C) previous inputs; x_t: (B, 1, C).
+
+    Returns (y_t (B, 1, C), new window)."""
+    full = jnp.concatenate([window, x_t], axis=1)                        # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", full, w) + b
+    return y[:, None, :], full[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# block init / forward
+# ---------------------------------------------------------------------------
+
+def init_mamba_block(rng, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d, di = cfg.d_model, cfg.ssm_d_inner
+    n, h, W = cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_conv_width
+    conv_dim = di + 2 * n
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "ln": L.rmsnorm_init(d, dtype),
+        "in_proj": L.dense_init(k1, d, 2 * di + 2 * n + h, dtype),
+        "conv_w": (jax.random.normal(k2, (W, conv_dim)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),          # A = -exp(A_log) = -1
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": L.rmsnorm_init(di, dtype),
+        "out_proj": L.dense_init(k3, di, d, dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    di, n, h = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n:]
+    return z, xbc, dt
+
+
+def mamba_block(lp: Params, cfg: ModelConfig, x: jnp.ndarray,
+                use_kernel: bool = False) -> jnp.ndarray:
+    """Full-sequence mamba2 block (pre-norm residual applied by caller)."""
+    b, l, _ = x.shape
+    di, n, h, p = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_head_dim
+    zxbcdt = x @ lp["in_proj"]
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc = jax.nn.silu(causal_conv(xbc, lp["conv_w"], lp["conv_b"]))
+    xs = xbc[..., :di].reshape(b, l, h, p)
+    B = xbc[..., di:di + n]
+    C = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+    A = -jnp.exp(lp["A_log"])
+    if use_kernel:
+        from repro.kernels import ops as kops
+        y, _ = kops.ssd(xs, dt, A, B, C, chunk=cfg.ssm_chunk)
+    else:
+        y, _ = ssd_chunked(xs, dt, A, B, C, chunk=cfg.ssm_chunk)
+    y = y + lp["D"].astype(y.dtype)[None, None, :, None] * xs
+    y = y.reshape(b, l, di)
+    y = L.rmsnorm(lp["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ lp["out_proj"]
+
+
+def mamba_block_step(lp: Params, cfg: ModelConfig, x: jnp.ndarray,
+                     state: jnp.ndarray, conv_win: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token mamba2 step.  x: (B, 1, D)."""
+    b = x.shape[0]
+    di, n, h, p = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_head_dim
+    zxbcdt = x @ lp["in_proj"]
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc_t, conv_win = causal_conv_step(conv_win, xbc, lp["conv_w"], lp["conv_b"])
+    xbc_t = jax.nn.silu(xbc_t)
+    xs = xbc_t[:, 0, :di].reshape(b, h, p)
+    B = xbc_t[:, 0, di:di + n]
+    C = xbc_t[:, 0, di + n:]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + lp["dt_bias"])   # (b,h)
+    A = -jnp.exp(lp["A_log"])
+    y, state = ssd_recurrent_step(state, xs, dt, A, B, C)
+    y = y + lp["D"].astype(y.dtype)[None, :, None] * xs
+    y = y.reshape(b, 1, di)
+    y = L.rmsnorm(lp["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ lp["out_proj"], state, conv_win
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def init_model(rng, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(rng, 3)
+    layer_rngs = jax.random.split(ks[0], cfg.num_layers)
+    stacked = jax.vmap(lambda r: init_mamba_block(r, cfg, dtype))(layer_rngs)
+    return {
+        "embed": L.embed_init(ks[1], cfg.vocab_size, cfg.d_model, dtype),
+        "layers": stacked,
+        "final_norm": L.rmsnorm_init(cfg.d_model, dtype),
+        "lm_head": L.dense_init(ks[2], cfg.d_model, cfg.vocab_size, dtype),
+    }
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jnp.ndarray, *,
+            remat: bool = False, use_kernel: bool = False,
+            last_only: bool = False) -> jnp.ndarray:
+    h = params["embed"][tokens]
+
+    def body(carry, lp):
+        x = act.shard_hidden(carry)
+        y = mamba_block(lp, cfg, L.rmsnorm(lp["ln"], x, cfg.norm_eps),
+                        use_kernel=use_kernel)
+        return act.shard_hidden(x + y), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = lax.scan(body, act.shard_hidden(h), params["layers"])
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    if last_only:
+        h = h[:, -1:]
+    return act.shard_logits((h @ params["lm_head"]).astype(jnp.float32))
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    """SSM decode cache: per-layer recurrent state + conv window.
+
+    Constant-size in seq_len (the SSM advantage for long_500k)."""
+    del seq_len
+    h, p, n = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.ssm_d_inner + 2 * n
+    return {
+        "state": jnp.zeros((cfg.num_layers, batch, h, p, n), jnp.float32),
+        "conv": jnp.zeros((cfg.num_layers, batch, cfg.ssm_conv_width - 1, conv_dim),
+                          dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
+                cache: Params) -> Tuple[jnp.ndarray, Params]:
+    h = params["embed"][token]
+
+    def body(carry, xs):
+        x = carry
+        lp, st, cw = xs
+        y, st, cw = mamba_block_step(lp, cfg, L.rmsnorm(lp["ln"], x, cfg.norm_eps),
+                                     st, cw)
+        return x + y, (st, cw)
+
+    h, (ns, ncw) = lax.scan(body, h, (params["layers"], cache["state"],
+                                      cache["conv"]))
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = (h[:, 0, :] @ params["lm_head"]).astype(jnp.float32)
+    return logits, {"state": ns, "conv": ncw, "pos": cache["pos"] + 1}

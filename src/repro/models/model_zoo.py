@@ -1,0 +1,126 @@
+"""Uniform model API across all families.
+
+Every family exposes:
+  init_params(rng, cfg, dtype)                        -> params pytree
+  forward(params, cfg, batch, remat)                  -> logits (B, S, V) fp32
+  loss(params, cfg, batch, remat)                     -> (scalar, metrics)
+  init_cache(cfg, batch, seq_len)                     -> decode cache pytree
+  decode_step(params, cfg, token, cache)              -> (logits (B, V), cache)
+
+``batch`` is a dict: tokens (B, S) int32, labels (B, S) int32, and the
+modality-stub inputs where applicable: frames (B, F, D) for encdec,
+patches (B, P, D) for vlm.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (DENSE, ENCDEC, HYBRID, MOE, SSM, VLM,
+                                ModelConfig)
+from repro.models import hybrid, mamba2, moe, transformer, whisper
+
+Params = Dict[str, Any]
+
+
+def init_params(rng, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    if cfg.family in (DENSE, VLM):
+        return transformer.init_decoder(rng, cfg, dtype)
+    if cfg.family == MOE:
+        return moe.init_decoder(rng, cfg, dtype)
+    if cfg.family == SSM:
+        return mamba2.init_model(rng, cfg, dtype)
+    if cfg.family == HYBRID:
+        return hybrid.init_model(rng, cfg, dtype)
+    if cfg.family == ENCDEC:
+        return whisper.init_model(rng, cfg, dtype)
+    raise ValueError(cfg.family)
+
+
+def init_params_spec(cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    """ShapeDtypeStruct pytree of the params — no allocation (dry-run)."""
+    rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda r: init_params(r, cfg, dtype), rng)
+
+
+def forward(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray], *,
+            remat: bool = False, use_kernel: bool = False,
+            last_only: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (logits, aux_loss) — aux_loss is 0 for non-MoE families."""
+    zero = jnp.zeros((), jnp.float32)
+    if cfg.family == DENSE:
+        return transformer.forward(params, cfg, batch["tokens"], remat=remat,
+                                   last_only=last_only), zero
+    if cfg.family == VLM:
+        return transformer.forward(params, cfg, batch["tokens"], remat=remat,
+                                   last_only=last_only,
+                                   patch_embeds=batch["patches"]), zero
+    if cfg.family == MOE:
+        return moe.forward(params, cfg, batch["tokens"], remat=remat,
+                           last_only=last_only)
+    if cfg.family == SSM:
+        return mamba2.forward(params, cfg, batch["tokens"], remat=remat,
+                              use_kernel=use_kernel, last_only=last_only), zero
+    if cfg.family == HYBRID:
+        return hybrid.forward(params, cfg, batch["tokens"], remat=remat,
+                              use_kernel=use_kernel, last_only=last_only), zero
+    if cfg.family == ENCDEC:
+        return whisper.forward(params, cfg, batch["frames"], batch["tokens"],
+                               remat=remat, last_only=last_only), zero
+    raise ValueError(cfg.family)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """logits (B, S, V) fp32, labels (B, S) -> mean NLL."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def loss(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray], *,
+         remat: bool = False, use_kernel: bool = False
+         ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    logits, aux = forward(params, cfg, batch, remat=remat, use_kernel=use_kernel)
+    labels = batch["labels"]
+    if cfg.family == VLM:
+        # logits cover [patches | text]; loss only on the text positions
+        logits = logits[:, -labels.shape[1]:, :]
+    nll = cross_entropy(logits, labels)
+    total = nll + cfg.router_aux_coef * aux
+    return total, {"nll": nll, "aux": aux}
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    if cfg.family in (DENSE, VLM):
+        return transformer.init_cache(cfg, batch, seq_len, dtype)
+    if cfg.family == MOE:
+        return moe.init_cache(cfg, batch, seq_len, dtype)
+    if cfg.family == SSM:
+        return mamba2.init_cache(cfg, batch, seq_len, dtype)
+    if cfg.family == HYBRID:
+        return hybrid.init_cache(cfg, batch, seq_len, dtype)
+    if cfg.family == ENCDEC:
+        return whisper.init_cache(cfg, batch, seq_len, dtype)
+    raise ValueError(cfg.family)
+
+
+def cache_spec(cfg: ModelConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, seq_len, dtype))
+
+
+def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray, cache, *,
+                use_kernel: bool = False):
+    if cfg.family in (DENSE, VLM):
+        return transformer.decode_step(params, cfg, token, cache,
+                                       use_kernel=use_kernel)
+    if cfg.family == MOE:
+        return moe.decode_step(params, cfg, token, cache, use_kernel=use_kernel)
+    if cfg.family == SSM:
+        return mamba2.decode_step(params, cfg, token, cache)
+    if cfg.family == HYBRID:
+        return hybrid.decode_step(params, cfg, token, cache)
+    if cfg.family == ENCDEC:
+        return whisper.decode_step(params, cfg, token, cache)
+    raise ValueError(cfg.family)

@@ -1,0 +1,104 @@
+"""AdamW with optional bf16 moment storage, global-norm clipping, schedules.
+
+Self-contained (no optax in this environment).  State is a pytree mirroring
+params: {"m": ..., "v": ..., "step": scalar}.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+Params = Any
+
+
+def _factorable(shape) -> bool:
+    """Factor the second moment for >=2D weights (Adafactor rule)."""
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def init_state(params: Params, cfg: TrainConfig) -> Dict[str, Any]:
+    dt = jnp.bfloat16 if cfg.bf16_state else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+
+    def v_init(p):
+        if cfg.factored_v and _factorable(p.shape):
+            # row/col mean-square stats — O(rows+cols) instead of O(rows*cols)
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return jnp.zeros(p.shape, dt)
+
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(v_init, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def lr_schedule(cfg: TrainConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup + cosine decay to 10%."""
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.1 + 0.45 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float) -> Tuple[Params, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def apply_updates(params: Params, grads: Params, state: Dict[str, Any],
+                  cfg: TrainConfig) -> Tuple[Params, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"]
+    lr = lr_schedule(cfg, step)
+    b1, b2, eps = cfg.adam_b1, cfg.adam_b2, cfg.adam_eps
+    c1 = 1.0 - b1 ** (step.astype(jnp.float32) + 1)
+    c2 = 1.0 - b2 ** (step.astype(jnp.float32) + 1)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        mh = m32 / c1
+        if isinstance(v, dict):                       # factored second moment
+            g2 = jnp.square(g32) + eps * eps
+            vr = b2 * v["vr"] + (1 - b2) * jnp.mean(g2, axis=-1)
+            vc = b2 * v["vc"] + (1 - b2) * jnp.mean(g2, axis=-2)
+            # rank-1 reconstruction: v ~ vr vc^T / mean(vr)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+            vhat = (vr[..., None] * vc[..., None, :] / denom[..., None]) / c2
+            delta = mh / (jnp.sqrt(vhat) + eps)
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            delta = mh / (jnp.sqrt(v32 / c2) + eps)
+            new_v = v32.astype(v.dtype)
+        delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m32.astype(m.dtype), new_v
+
+    # traverse v first: its factored {vr, vc} dicts are leaves, and params/
+    # grads/m hold plain arrays at the corresponding positions
+    is_vleaf = lambda x: isinstance(x, dict) and set(x) == {"vr", "vc"}
+    triples = jax.tree.map(lambda v, p, g, m: upd(p, g, m, v),
+                           state["v"], params, grads, state["m"],
+                           is_leaf=is_vleaf)
+    leaf3 = lambda x: isinstance(x, tuple) and len(x) == 3
+    new_p = jax.tree.map(lambda t: t[0], triples, is_leaf=leaf3)
+    new_m = jax.tree.map(lambda t: t[1], triples, is_leaf=leaf3)
+    new_v = jax.tree.map(lambda t: t[2], triples, is_leaf=leaf3)
+    new_state = {"m": new_m, "v": new_v, "step": step + 1}
+    return new_p, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,67 @@
+"""Request batching: pad/pack variable-length prompts into fixed shapes.
+
+XLA serving needs static shapes; the batcher rounds prompt lengths up to a
+bucket and pads the batch to the engine's configured size (same discipline as
+the HI router's static capacity).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray                  # (len,) int32
+    max_new_tokens: int = 16
+
+
+@dataclass
+class Batch:
+    tokens: np.ndarray                   # (B, S) right-padded
+    lengths: np.ndarray                  # (B,)
+    request_ids: np.ndarray              # (B,) -1 = padding slot
+    max_new_tokens: int
+
+
+def pad_to_bucket(n: int, buckets: Sequence[int]) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+class Batcher:
+    def __init__(self, batch_size: int, buckets: Sequence[int] = (32, 64, 128),
+                 pad_id: int = 0):
+        self.batch_size = batch_size
+        self.buckets = tuple(sorted(buckets))
+        self.pad_id = pad_id
+        self.queue: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def ready(self) -> bool:
+        return len(self.queue) >= self.batch_size
+
+    def next_batch(self) -> Optional[Batch]:
+        if not self.queue:
+            return None
+        take = self.queue[: self.batch_size]
+        self.queue = self.queue[self.batch_size:]
+        max_len = max(len(r.prompt) for r in take)
+        bucket = pad_to_bucket(max_len, self.buckets)
+        tokens = np.full((self.batch_size, bucket), self.pad_id, np.int32)
+        lengths = np.zeros((self.batch_size,), np.int32)
+        rids = np.full((self.batch_size,), -1, np.int32)
+        for i, r in enumerate(take):
+            L = min(len(r.prompt), bucket)
+            tokens[i, :L] = r.prompt[:L]
+            lengths[i] = L
+            rids[i] = r.request_id
+        return Batch(tokens, lengths, rids,
+                     max(r.max_new_tokens for r in take))

@@ -1,0 +1,162 @@
+"""HI serving engine: the paper's ED/ES cascade over LM requests.
+
+The S-tier (reduced variant of the same family) prefills + decodes every
+request; per-request confidence (mean token confidence from the fused
+hi_gate) drives the paper's threshold rule; complex requests escalate to the
+L-tier through the static-capacity router.  On a pod mesh the escalation
+gather is the ED→ES offload link (DESIGN.md §2).
+
+This module is deliberately generic over family — it only needs the
+model_zoo API — and is exercised end-to-end on CPU with reduced configs by
+``examples/serve_cascade.py`` and the integration tests.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import HIConfig, ModelConfig
+from repro.core import confidence as _c_unused  # noqa: F401 (keep pkg init)
+from repro.core.confidence import confidence as _confidence
+from repro.core import router as router_mod
+from repro.models import model_zoo
+from repro.serving import sampler
+
+
+@dataclass
+class TierModel:
+    cfg: ModelConfig
+    params: Any
+
+
+def _decode_loop(params, cfg: ModelConfig, tokens: jnp.ndarray,
+                 cache_len: int, steps: int, metric: str,
+                 use_kernel: bool = False):
+    """Prefill (token-by-token for family-uniformity) + greedy decode.
+
+    Returns (generated (B, steps), mean confidence (B,)).
+    """
+    b, s = tokens.shape
+    cache = model_zoo.init_cache(cfg, b, cache_len)
+
+    def prefill_body(carry, t):
+        cache, _ = carry
+        logits, cache = model_zoo.decode_step(params, cfg, t[:, None], cache)
+        return (cache, logits), None
+
+    (cache, logits), _ = jax.lax.scan(prefill_body,
+                                      (cache, jnp.zeros((b, cfg.vocab_size))),
+                                      tokens.T)
+
+    def gen_body(carry, _):
+        cache, logits = carry
+        conf = _confidence(logits, metric)
+        tok = sampler.greedy(logits)
+        logits, cache = model_zoo.decode_step(params, cfg, tok[:, None], cache)
+        return (cache, logits), (tok, conf)
+
+    (_, _), (toks, confs) = jax.lax.scan(gen_body, (cache, logits), None,
+                                         length=steps)
+    return toks.T, confs.mean(axis=0)
+
+
+class HIEngine:
+    """Two-tier cascade engine.
+
+    ``online_policy`` (paper ref [27], Moothedath et al.): when set, theta is
+    tuned online from the L-tier's feedback on offloaded requests — S-tier
+    agreement with the L-tier output is the correctness proxy (the ED never
+    sees ground truth).  The engine then uses policy.theta instead of the
+    static hi.theta.
+    """
+
+    def __init__(self, s_tier: TierModel, l_tier: TierModel, hi: HIConfig,
+                 cache_len: int = 128, max_new_tokens: int = 8,
+                 online_policy=None):
+        self.s = s_tier
+        self.l = l_tier
+        self.hi = hi
+        self.online_policy = online_policy
+        self.cache_len = cache_len
+        self.max_new_tokens = max_new_tokens
+        self._s_step = jax.jit(partial(_decode_loop, cfg=self.s.cfg,
+                                       cache_len=cache_len,
+                                       steps=max_new_tokens, metric=hi.metric))
+        self._l_step = jax.jit(partial(_decode_loop, cfg=self.l.cfg,
+                                       cache_len=cache_len,
+                                       steps=max_new_tokens, metric=hi.metric))
+        self.stats: Dict[str, float] = {
+            "requests": 0, "offloaded": 0, "dropped": 0,
+            "s_time": 0.0, "l_time": 0.0}
+
+    def serve(self, tokens: np.ndarray) -> Dict[str, np.ndarray]:
+        """tokens: (B, S) prompt batch -> generations + offload accounting."""
+        b = tokens.shape[0]
+        cap = router_mod.capacity_for(b, self.hi.capacity_factor)
+        t0 = time.perf_counter()
+        s_out, s_conf = self._s_step(self.s.params, tokens=jnp.asarray(tokens))
+        s_out.block_until_ready()
+        t1 = time.perf_counter()
+
+        theta = (self.online_policy.theta if self.online_policy is not None
+                 else self.hi.theta)
+        offload = np.asarray(s_conf) < theta
+        decision = router_mod.route(jnp.asarray(offload), jnp.asarray(s_conf),
+                                    cap)
+        complex_tokens = jnp.asarray(tokens)[decision.indices]
+        l_out, _ = self._l_step(self.l.params, tokens=complex_tokens)
+        l_out.block_until_ready()
+        t2 = time.perf_counter()
+
+        merged = router_mod.scatter_merge(s_out, l_out, decision)
+
+        if self.online_policy is not None:
+            # L-tier agreement on served requests is the correctness proxy
+            served_idx = np.asarray(decision.indices)[np.asarray(decision.valid)]
+            if len(served_idx):
+                s_sub = np.asarray(s_out)[served_idx]
+                l_sub = np.asarray(l_out)[np.asarray(decision.valid)]
+                agree = (s_sub == l_sub).all(axis=-1)
+                self.online_policy.update(np.asarray(s_conf)[served_idx],
+                                          agree)
+
+        self.stats["requests"] += b
+        self.stats["offloaded"] += int(offload.sum())
+        self.stats["dropped"] += int(decision.dropped)
+        self.stats["s_time"] += t1 - t0
+        self.stats["l_time"] += t2 - t1
+        return {
+            "tokens": np.asarray(merged),
+            "s_tokens": np.asarray(s_out),
+            "confidence": np.asarray(s_conf),
+            "offloaded": np.asarray(decision.offload_mask),
+            "served_remote": np.asarray(decision.served_remote),
+        }
+
+    def summary(self) -> Dict[str, float]:
+        n = max(self.stats["requests"], 1)
+        return {
+            **self.stats,
+            "offload_frac": self.stats["offloaded"] / n,
+            "drop_frac": self.stats["dropped"] / n,
+        }
+
+
+def build_engine(cfg: ModelConfig, hi: HIConfig, rng=None, dtype=jnp.float32,
+                 cache_len: int = 128, max_new_tokens: int = 8) -> HIEngine:
+    """Construct an S/L cascade for one architecture family: L = reduced
+    assigned config (CPU-runnable), S = its s_variant."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(rng)
+    l_cfg = cfg
+    s_cfg = cfg.s_variant(hi.s_scale)
+    l_params = model_zoo.init_params(k1, l_cfg, dtype)
+    s_params = model_zoo.init_params(k2, s_cfg, dtype)
+    return HIEngine(TierModel(s_cfg, s_params), TierModel(l_cfg, l_params),
+                    hi, cache_len=cache_len, max_new_tokens=max_new_tokens)

@@ -1,0 +1,15 @@
+"""Token samplers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature(rng, logits: jnp.ndarray, temp: float = 1.0) -> jnp.ndarray:
+    if temp <= 0:
+        return greedy(logits)
+    return jax.random.categorical(rng, logits / temp, axis=-1).astype(jnp.int32)

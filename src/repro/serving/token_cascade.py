@@ -1,0 +1,142 @@
+"""Token-level HI: the cascade at BLOCK granularity inside one generation.
+
+The paper gates whole samples; its §2 notes early-exit (BranchyNet-style)
+composes with HI.  For LM serving the natural unit between "sample" and
+"layer" is a BLOCK of tokens: the S-tier drafts a block of k tokens with
+per-token confidences (the same fused hi_gate statistic); if the minimum
+confidence in the block falls under theta, the L-tier regenerates the block
+— catching its cache up by prefilling the accepted prefix (one bulk forward,
+not k decode steps) and decoding the block itself.
+
+Cost accounting mirrors the paper exactly, one level down:
+  - accepted blocks cost only the S-tier draft;
+  - escalated blocks cost beta (the L-tier catch-up + regeneration).
+Savings = (1 - escalated_fraction) of the L-tier work, with the S-tier draft
+as the paper's "extra local inference" term.
+
+Decoder-only text families; host-driven loop over jitted per-tier programs
+(the same architecture as HIEngine, one granularity finer).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import HIConfig, ModelConfig
+from repro.core.confidence import confidence as conf_fn
+from repro.models import model_zoo
+from repro.serving import sampler
+
+
+def _draft_block(params, cfg: ModelConfig, cache, last_logits, steps: int,
+                 metric: str):
+    """Greedy-draft ``steps`` tokens from current logits; returns
+    (tokens (B, steps), min confidence (B,), cache, last logits)."""
+
+    def body(carry, _):
+        cache, logits = carry
+        tok = sampler.greedy(logits)
+        conf = conf_fn(logits, metric)
+        logits, cache = model_zoo.decode_step(params, cfg, tok[:, None], cache)
+        return (cache, logits), (tok, conf)
+
+    (cache, logits), (toks, confs) = jax.lax.scan(
+        body, (cache, last_logits), None, length=steps)
+    return toks.T, confs.min(axis=0), cache, logits
+
+
+def _feed_tokens(params, cfg: ModelConfig, cache, tokens):
+    """Catch a tier's cache up over ``tokens`` (B, K); returns last logits."""
+
+    def body(carry, t):
+        cache, _ = carry
+        logits, cache = model_zoo.decode_step(params, cfg, t[:, None], cache)
+        return (cache, logits), None
+
+    b = tokens.shape[0]
+    (cache, logits), _ = jax.lax.scan(
+        body, (cache, jnp.zeros((b, cfg.vocab_size))), tokens.T)
+    return cache, logits
+
+
+@dataclass
+class TokenCascade:
+    """Block-granularity HI over one batched generation."""
+
+    s_cfg: ModelConfig
+    l_cfg: ModelConfig
+    s_params: Any
+    l_params: Any
+    hi: HIConfig
+    block: int = 4
+    cache_len: int = 128
+
+    def __post_init__(self):
+        self._s_draft = jax.jit(partial(_draft_block, cfg=self.s_cfg,
+                                        steps=self.block,
+                                        metric=self.hi.metric))
+        self._s_feed = jax.jit(partial(_feed_tokens, cfg=self.s_cfg))
+        self._l_feed = jax.jit(partial(_feed_tokens, cfg=self.l_cfg))
+        self._l_draft = jax.jit(partial(_draft_block, cfg=self.l_cfg,
+                                        steps=self.block,
+                                        metric=self.hi.metric))
+        self.stats = {"blocks": 0, "escalated": 0}
+
+    def generate(self, prompt: np.ndarray, num_blocks: int) -> Dict[str, Any]:
+        """prompt: (B, P) -> dict(tokens (B, num_blocks*block), stats).
+
+        The whole batch escalates a block together (static shapes); per-
+        request escalation is the sample-level router's job one level up.
+        """
+        b = prompt.shape[0]
+        s_cache = model_zoo.init_cache(self.s_cfg, b, self.cache_len)
+        l_cache = model_zoo.init_cache(self.l_cfg, b, self.cache_len)
+        prompt_j = jnp.asarray(prompt)
+        s_cache, s_logits = self._s_feed(self.s_params, cache=s_cache,
+                                         tokens=prompt_j)
+        l_cache, l_logits = self._l_feed(self.l_params, cache=l_cache,
+                                         tokens=prompt_j)
+
+        out: List[np.ndarray] = []
+        for _ in range(num_blocks):
+            toks, conf, s_cache_new, s_logits_new = self._s_draft(
+                self.s_params, cache=s_cache, last_logits=s_logits)
+            self.stats["blocks"] += 1
+            if float(conf.min()) < self.hi.theta:
+                # escalate: L regenerates the block from ITS state
+                self.stats["escalated"] += 1
+                toks, _, l_cache, l_logits = self._l_draft(
+                    self.l_params, cache=l_cache, last_logits=l_logits)
+                # S must follow L's choice: rewind by re-feeding L's tokens
+                s_cache, s_logits = self._s_feed(self.s_params, cache=s_cache,
+                                                 tokens=toks)
+            else:
+                # accepted: L's cache catches up over the drafted block
+                s_cache, s_logits = s_cache_new, s_logits_new
+                l_cache, l_logits = self._l_feed(self.l_params, cache=l_cache,
+                                                 tokens=toks)
+            out.append(np.asarray(toks))
+        return {
+            "tokens": np.concatenate(out, axis=1),
+            "blocks": self.stats["blocks"],
+            "escalated": self.stats["escalated"],
+            "escalation_frac": self.stats["escalated"]
+            / max(self.stats["blocks"], 1),
+        }
+
+
+def build_token_cascade(cfg: ModelConfig, hi: HIConfig, rng=None,
+                        block: int = 4, cache_len: int = 64) -> TokenCascade:
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(rng)
+    s_cfg = cfg.s_variant(hi.s_scale)
+    return TokenCascade(
+        s_cfg=s_cfg, l_cfg=cfg,
+        s_params=model_zoo.init_params(k1, s_cfg),
+        l_params=model_zoo.init_params(k2, cfg),
+        hi=hi, block=block, cache_len=cache_len)

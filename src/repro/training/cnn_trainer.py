@@ -1,0 +1,83 @@
+"""Small supervised-training loop for the paper's CNN classifiers (§3–§5).
+
+Used by the examples and benchmarks to train the S-ML / L-ML tiers on the
+synthetic CWRU / CIFAR-10 stand-in datasets on CPU.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.models import cnn
+from repro.optim import adamw
+
+
+def _loss_fn(params, cfg: cnn.CNNConfig, x, y):
+    logits = cnn.apply_cnn(params, cfg, x)
+    if cfg.num_classes == 1:
+        y = y.astype(jnp.float32)
+        p = logits[:, 0]
+        nll = jnp.mean(jnp.maximum(p, 0) - p * y + jnp.log1p(jnp.exp(-jnp.abs(p))))
+    else:
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+        nll = jnp.mean(logz - gold)
+    return nll
+
+
+def train_cnn(cfg: cnn.CNNConfig, x_train: np.ndarray, y_train: np.ndarray,
+              *, epochs: int = 5, batch: int = 128, lr: float = 2e-3,
+              seed: int = 0, verbose: bool = False) -> Dict:
+    rng = jax.random.PRNGKey(seed)
+    params = cnn.init_cnn(rng, cfg)
+    total_steps = epochs * max(1, len(x_train) // batch)
+    tcfg = TrainConfig(lr=lr, warmup_steps=max(1, min(20, total_steps // 10)),
+                       total_steps=total_steps,
+                       weight_decay=0.01, bf16_state=False)
+    opt = adamw.init_state(params, tcfg)
+
+    @jax.jit
+    def step(params, opt, x, y):
+        loss, grads = jax.value_and_grad(_loss_fn)(params, cfg, x, y)
+        params, opt, _ = adamw.apply_updates(params, grads, opt, tcfg)
+        return params, opt, loss
+
+    n = len(x_train)
+    order_rng = np.random.default_rng(seed)
+    t0 = time.time()
+    for ep in range(epochs):
+        perm = order_rng.permutation(n)
+        losses = []
+        for i in range(0, n - batch + 1, batch):
+            idx = perm[i:i + batch]
+            params, opt, loss = step(params, opt, jnp.asarray(x_train[idx]),
+                                     jnp.asarray(y_train[idx]))
+            losses.append(float(loss))
+        if verbose:
+            print(f"  epoch {ep}: loss {np.mean(losses):.4f} "
+                  f"({time.time() - t0:.0f}s)")
+    return params
+
+
+def predict_logits(params, cfg: cnn.CNNConfig, x: np.ndarray,
+                   batch: int = 512) -> np.ndarray:
+    fn = jax.jit(partial(cnn.apply_cnn, cfg=cfg))
+    outs = []
+    for i in range(0, len(x), batch):
+        outs.append(np.asarray(fn(params, x=jnp.asarray(x[i:i + batch]))))
+    return np.concatenate(outs)
+
+
+def accuracy(params, cfg: cnn.CNNConfig, x: np.ndarray, y: np.ndarray) -> float:
+    logits = predict_logits(params, cfg, x)
+    if cfg.num_classes == 1:
+        pred = (logits[:, 0] > 0).astype(np.int32)
+    else:
+        pred = logits.argmax(-1)
+    return float((pred == y).mean())

@@ -1,0 +1,78 @@
+"""Training step: loss -> grads -> AdamW, with microbatch gradient
+accumulation expressed as a ``lax.scan`` (keeps both HLO size and saved
+activations bounded — see DESIGN.md §5)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import model_zoo
+from repro.optim import adamw
+
+Params = Any
+Batch = Dict[str, jnp.ndarray]
+
+
+def _split_microbatches(batch: Batch, n: int) -> Batch:
+    """(B, ...) -> (n, B//n, ...)."""
+    def r(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} not divisible by grad_accum {n}"
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def grads_and_metrics(params: Params, mcfg: ModelConfig, tcfg: TrainConfig,
+                      batch: Batch) -> Tuple[Params, Dict[str, jnp.ndarray]]:
+    loss_fn = lambda p, b: model_zoo.loss(p, mcfg, b, remat=tcfg.remat)
+    if tcfg.grad_accum <= 1:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        return grads, dict(metrics, loss=loss)
+
+    micro = _split_microbatches(batch, tcfg.grad_accum)
+
+    acc_dt = jnp.dtype(tcfg.accum_dtype)
+
+    def body(carry, mb):
+        acc, _ = carry
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, mb)
+        acc = jax.tree.map(lambda a, g: a + g.astype(acc_dt), acc, grads)
+        return (acc, loss), metrics
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+    (gsum, last_loss), metrics = lax.scan(body, (zeros, jnp.zeros(())), micro)
+    grads = jax.tree.map(lambda g: (g.astype(jnp.float32) / tcfg.grad_accum
+                                    ).astype(acc_dt), gsum)
+    metrics = jax.tree.map(jnp.mean, metrics)
+    return grads, dict(metrics, loss=last_loss)
+
+
+def train_step(params: Params, opt_state: Dict[str, Any], batch: Batch, *,
+               mcfg: ModelConfig, tcfg: TrainConfig
+               ) -> Tuple[Params, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    grads, metrics = grads_and_metrics(params, mcfg, tcfg, batch)
+    params, opt_state, opt_metrics = adamw.apply_updates(params, grads,
+                                                         opt_state, tcfg)
+    return params, opt_state, {**metrics, **opt_metrics}
+
+
+def make_train_step(mcfg: ModelConfig, tcfg: TrainConfig):
+    return partial(train_step, mcfg=mcfg, tcfg=tcfg)
+
+
+def eval_step(params: Params, batch: Batch, *, mcfg: ModelConfig
+              ) -> Dict[str, jnp.ndarray]:
+    logits, _ = model_zoo.forward(params, mcfg, batch)
+    if mcfg.family == "vlm":
+        logits = logits[:, -batch["labels"].shape[1]:, :]
+    nll = model_zoo.cross_entropy(logits, batch["labels"])
+    pred = jnp.argmax(logits, axis=-1)
+    acc = jnp.mean((pred == batch["labels"]).astype(jnp.float32))
+    return {"nll": nll, "acc": acc}

@@ -1,0 +1,213 @@
+"""Unit tests for the HI core, pinned to the paper's published numbers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import HIConfig
+from repro.core import calibrate, replay
+from repro.core.baselines import (TimingModel, dnn_partitioning, full_offload,
+                                  oma, omd, partition_per_sample_ms, tinyml)
+from repro.core.cascade import classifier_cascade
+from repro.core.confidence import confidence
+from repro.core.cost import CostReport, cost_closed_form, relative_cost_reduction
+from repro.core.policy import (BinaryRelevancePolicy, OnlineThresholdPolicy,
+                               ThresholdPolicy)
+from repro.core.router import capacity_for, gather, route, scatter_merge
+
+
+# ---------------------------------------------------------------------------
+# paper-number replay (Table 1, Table 3, Fig. 8)
+# ---------------------------------------------------------------------------
+def test_table1_exact():
+    t = replay.table1(beta=0.5)
+    hi = t["hi"]
+    assert hi.offloaded == 3550
+    assert hi.misclassified == 1648
+    assert abs(hi.accuracy - 0.8352) < 1e-12
+    assert hi.cost == 3550 * 0.5 + 1648
+    assert t["full_offload"].cost == 10_000 * 0.5 + 500
+    assert t["no_offload"].cost == 3742
+
+
+def test_table1_cost_reduction_range():
+    """Paper: 14–49% relative reduction vs full offload (beta in ~[0.25, 1])."""
+    lo = replay.table1_cost_reduction(0.25)
+    hi = replay.table1_cost_reduction(0.999)
+    assert 13.0 < lo < 20.0
+    assert 45.0 < hi < 52.0
+
+
+def test_table3_dog_filter():
+    d = replay.DogReplay()
+    assert d.n_offloaded == 4433
+    assert abs(d.accuracy - 0.912) < 1e-12
+    assert d.cost_hi(0.5) == 912 * 0.5 + 3521
+    # paper: 50-60% cost reduction across beta
+    for beta in (0.01, 0.5, 0.99):
+        assert 50.0 < d.cost_reduction(beta) < 61.0
+
+
+def test_fig8_headline_numbers():
+    f = replay.fig8_hi_vs_full_offload(0.5)
+    assert abs(f["latency_reduction_pct"] - 63.15) < 0.2   # paper: 63.15%
+    assert abs(f["offload_reduction_pct"] - 64.45) < 0.2   # paper: 64.45%
+    assert abs(f["hi_accuracy_pct"] - 83.52) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+def test_cost_closed_form_matches_report():
+    r = CostReport("x", 100, 30, 5, 2, beta=0.4)
+    assert r.cost == cost_closed_form(30, 5, 2, 0.4)
+    assert r.accuracy == 1 - 7 / 100
+
+
+def test_relative_cost_reduction():
+    assert relative_cost_reduction(50, 100) == 50.0
+
+
+# ---------------------------------------------------------------------------
+# calibration
+# ---------------------------------------------------------------------------
+def test_brute_force_theta_optimal():
+    rng = np.random.default_rng(1)
+    conf = rng.random(1000)
+    s_ok = rng.random(1000) < conf
+    th, c = calibrate.brute_force_theta(conf, s_ok, beta=0.3)
+    grid = np.linspace(0, 1, 1001)
+    naive = min(np.sum(np.where(conf < t, 0.3, 1.0 - s_ok)) for t in grid)
+    assert c <= naive + 1e-9
+
+
+def test_theta_extremes():
+    conf = np.array([0.1, 0.9])
+    # S-ML always wrong -> offload everything: theta* ~ 1
+    th, _ = calibrate.brute_force_theta(conf, np.array([False, False]), beta=0.1)
+    assert th > 0.9
+    # S-ML always right & beta high -> keep everything: theta* = 0
+    th, _ = calibrate.brute_force_theta(conf, np.array([True, True]), beta=0.9)
+    assert th <= 0.1 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+def test_threshold_policy_rule():
+    p = ThresholdPolicy(theta=0.6)
+    conf = jnp.asarray([0.59, 0.6, 0.61])
+    np.testing.assert_array_equal(np.asarray(p.offload(conf)),
+                                  [True, False, False])
+
+
+def test_binary_relevance_policy_rule():
+    p = BinaryRelevancePolicy(theta=0.5)
+    conf = jnp.asarray([0.49, 0.5, 0.9])
+    np.testing.assert_array_equal(np.asarray(p.offload(conf)),
+                                  [False, True, True])
+
+
+def test_online_policy_converges_toward_optimum():
+    """With S-ML always right and beta small-but-nonzero the best threshold is
+    low; with S-ML always wrong it is high."""
+    rng = np.random.default_rng(0)
+    conf = rng.random(800)
+    pol = OnlineThresholdPolicy(beta=0.2, grid=64, eta_lr=0.3)
+    pol.update(conf, np.ones_like(conf, bool))     # always right
+    assert pol.theta < 0.25
+    pol2 = OnlineThresholdPolicy(beta=0.2, grid=64, eta_lr=0.3)
+    pol2.update(conf, np.zeros_like(conf, bool))   # always wrong
+    assert pol2.theta > 0.75
+
+
+# ---------------------------------------------------------------------------
+# router
+# ---------------------------------------------------------------------------
+def test_route_respects_capacity_and_priority():
+    conf = jnp.asarray([0.1, 0.9, 0.2, 0.8, 0.05])
+    mask = conf < 0.5            # 3 want offload
+    d = route(mask, conf, capacity=2)
+    assert int(d.valid.sum()) == 2
+    assert int(d.dropped) == 1
+    # the two LOWEST-confidence offloads are served
+    served_idx = set(np.asarray(d.indices)[np.asarray(d.valid)])
+    assert served_idx == {0, 4}
+
+
+def test_scatter_merge_only_replaces_served():
+    conf = jnp.asarray([0.1, 0.9, 0.2])
+    mask = conf < 0.5
+    d = route(mask, conf, capacity=2)
+    s_out = jnp.asarray([10, 20, 30])
+    l_out = jnp.asarray([111, 333])[jnp.argsort(d.indices[d.valid])] \
+        if False else jnp.asarray([1, 2])
+    merged = scatter_merge(s_out, l_out, d)
+    m = np.asarray(merged)
+    assert m[1] == 20                       # not offloaded -> untouched
+    assert set(m[[0, 2]]) == {1, 2}          # offloaded -> L outputs
+
+
+def test_cascade_full_and_never_offload_limits():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(32, 8)), jnp.float32)
+    Ws = jnp.asarray(rng.normal(size=(8, 10)), jnp.float32)
+    Wl = jnp.asarray(rng.normal(size=(8, 10)) * 10, jnp.float32)
+    apply_fn = lambda p, xx: xx @ p
+    # theta=0 -> never offload; predictions == S predictions
+    c0 = classifier_cascade(apply_fn, apply_fn, HIConfig(theta=0.0,
+                                                         capacity_factor=1.0))
+    out0 = c0.infer(Ws, Wl, x)
+    np.testing.assert_array_equal(np.asarray(out0["pred"]),
+                                  np.asarray(out0["s_pred"]))
+    assert int(out0["n_offloaded"]) == 0
+    # theta=1+ -> offload all (capacity 1.0): predictions == L predictions
+    c1 = classifier_cascade(apply_fn, apply_fn, HIConfig(theta=1.1,
+                                                         capacity_factor=1.0))
+    out1 = c1.infer(Ws, Wl, x)
+    l_pred = np.argmax(np.asarray(x @ Wl), -1)
+    np.testing.assert_array_equal(np.asarray(out1["pred"]), l_pred)
+    assert int(out1["n_offloaded"]) == 32
+
+
+# ---------------------------------------------------------------------------
+# baselines + timing model (Appendix tables)
+# ---------------------------------------------------------------------------
+def test_partitioning_always_worse_than_full_offload():
+    """Appendix: every split point is dominated by full offload (74.34 ms)."""
+    for layer in range(1, 8):
+        assert partition_per_sample_ms(layer) > partition_per_sample_ms(0)
+    # Table 6 row check: split at layer 1 in [618.1, 651.83] ms
+    assert 600 < partition_per_sample_ms(1) < 660
+
+
+def test_omd_balances_makespan():
+    tm = TimingModel()
+    s_ok = np.ones(1000, bool)
+    l_ok = np.ones(1000, bool)
+    r = omd(s_ok, l_ok, tm)
+    k = r.n - r.n_offloaded
+    assert abs(k * tm.t_local_ms - r.n_offloaded * tm.t_offload_ms) \
+        <= max(tm.t_local_ms, tm.t_offload_ms) * 2
+
+
+def test_oma_worst_case_is_worst():
+    rng = np.random.default_rng(5)
+    s_ok = rng.random(500) < 0.6
+    l_ok = rng.random(500) < 0.95
+    tm = TimingModel()
+    budget = tm.hi_makespan_ms(500, 150)
+    r_rand = oma(s_ok, l_ok, budget, tm)
+    r_worst = oma(s_ok, l_ok, budget, tm, worst_case=True)
+    assert r_worst.accuracy <= r_rand.accuracy + 0.02
+
+
+def test_tinyml_fastest_full_offload_most_accurate():
+    rng = np.random.default_rng(6)
+    s_ok = rng.random(500) < 0.6
+    l_ok = rng.random(500) < 0.95
+    tm = TimingModel()
+    t = tinyml(s_ok, tm)
+    f = full_offload(l_ok, tm)
+    assert t.makespan_ms < f.makespan_ms
+    assert f.accuracy > t.accuracy

@@ -1,0 +1,85 @@
+"""Data pipelines: CWRU-like vibration stats (paper Figs 4-5) and the
+CIFAR-10 stand-in's S/L-relevant structure."""
+import numpy as np
+import pytest
+
+from repro.data import images, tokens, vibration as vib
+
+
+# ---------------------------------------------------------------------------
+# vibration (§3)
+# ---------------------------------------------------------------------------
+def test_threshold_separates_normal_from_faults():
+    """Paper: windowed mean < 0.07 <=> normal, 100% separation."""
+    _, labels, means = vib.make_dataset(windows_per_state=30, seed=0)
+    pred = vib.threshold_sml(means, 0.07)
+    assert (pred == (labels != 0)).all()
+
+
+def test_inner_outer_not_threshold_separable():
+    """Paper Fig 5: at large widths inner/outer lace overlap in mean |x| —
+    only the CNN can tell them apart."""
+    rng = np.random.default_rng(0)
+    m_inner = vib.windowed_means(vib.gen_series("inner_036", 30, rng))
+    m_outer = vib.windowed_means(vib.gen_series("outer_036", 30, rng))
+    lo = max(m_inner.min(), m_outer.min())
+    hi = min(m_inner.max(), m_outer.max())
+    assert hi > lo          # overlapping ranges -> no separating threshold
+
+
+def test_bandwidth_math():
+    """Paper: 100 machines x 2 REB x 48kHz x 2B = 153.6 Mbps >= 76.8."""
+    assert vib.bandwidth_required(100, rebs_per_machine=2) == pytest.approx(153.6)
+    assert vib.bandwidth_required(100, rebs_per_machine=1) == pytest.approx(76.8)
+
+
+def test_windows_to_images_shape():
+    rng = np.random.default_rng(1)
+    s = vib.gen_series("ball_018", 5, rng)
+    imgs = vib.windows_to_images(s)
+    assert imgs.shape == (5, 64, 64, 1)
+    assert imgs.min() >= 0.0 and imgs.max() <= 1.0
+
+
+def test_normal_fraction_oversampling():
+    _, labels, _ = vib.make_dataset(10, seed=2, normal_fraction=0.9)
+    assert (labels == 0).mean() > 0.8
+
+
+# ---------------------------------------------------------------------------
+# images (§4-5)
+# ---------------------------------------------------------------------------
+def test_image_dataset_shapes_and_balance():
+    x, y = images.make_dataset(500, seed=0)
+    assert x.shape == (500, 32, 32, 3) and x.dtype == np.float32
+    assert set(np.unique(y)) <= set(range(10))
+    # roughly balanced
+    counts = np.bincount(y, minlength=10)
+    assert counts.min() > 20
+
+
+def test_tint_carries_class_signal():
+    """A tint-only linear readout must beat chance by a wide margin (this is
+    what the S-ML learns)."""
+    x, y = images.make_dataset(2000, seed=1, patch_amp=0.0)
+    mean_rg = x.mean(axis=(1, 2))[:, :2]          # (n, 2) colour means
+    ang = np.arctan2(mean_rg[:, 1], mean_rg[:, 0])
+    pred = np.round(ang / (2 * np.pi / 10)).astype(int) % 10
+    acc = (pred == y).mean()
+    assert 0.45 < acc < 0.75    # tint Bayes ~62%
+
+
+def test_binary_labels():
+    _, y = images.make_dataset(200, seed=2)
+    b = images.binary_labels(y)
+    assert ((b == 1) == (y == images.DOG_CLASS)).all()
+
+
+# ---------------------------------------------------------------------------
+# tokens
+# ---------------------------------------------------------------------------
+def test_lm_batches_shapes():
+    for batch in tokens.lm_batches(vocab=97, batch=4, seq=33, steps=2):
+        assert batch["tokens"].shape == (4, 33)
+        assert batch["labels"].shape == (4, 33)
+        assert batch["tokens"].max() < 97

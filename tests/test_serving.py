@@ -1,0 +1,93 @@
+"""Serving path: batcher, HI engine end-to-end on a reduced arch."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import HIConfig
+from repro.configs.registry import ARCHS
+from repro.serving.batcher import Batcher, Request
+from repro.serving.engine import build_engine
+
+
+def test_batcher_padding_and_buckets():
+    b = Batcher(batch_size=4, buckets=(8, 16), pad_id=0)
+    for i, L in enumerate([3, 9, 5]):
+        b.submit(Request(i, np.arange(1, L + 1, dtype=np.int32)))
+    batch = b.next_batch()
+    assert batch.tokens.shape == (4, 16)          # bucket 16 (max len 9)
+    assert (batch.request_ids >= 0).sum() == 3    # one padding slot
+    assert batch.lengths[0] == 3
+    assert (batch.tokens[0, 3:] == 0).all()
+
+
+def test_batcher_queue_drain():
+    b = Batcher(batch_size=2, buckets=(8,))
+    for i in range(5):
+        b.submit(Request(i, np.ones(4, np.int32)))
+    seen = 0
+    while b.queue:
+        seen += int((b.next_batch().request_ids >= 0).sum())
+    assert seen == 5
+
+
+@pytest.mark.parametrize("theta,expect", [(0.0, "none"), (1.1, "all")])
+def test_engine_offload_extremes(theta, expect):
+    cfg = ARCHS["gemma3-1b"].reduced()
+    hi = HIConfig(theta=theta, capacity_factor=1.0)
+    eng = build_engine(cfg, hi, max_new_tokens=4, cache_len=32)
+    toks = np.random.default_rng(0).integers(0, cfg.vocab_size,
+                                             (4, 8)).astype(np.int32)
+    out = eng.serve(toks)
+    if expect == "none":
+        assert out["offloaded"].sum() == 0
+        np.testing.assert_array_equal(out["tokens"], out["s_tokens"])
+    else:
+        assert out["offloaded"].sum() == 4
+        assert out["served_remote"].sum() == 4
+
+
+def test_engine_capacity_drops_counted():
+    cfg = ARCHS["gemma3-1b"].reduced()
+    hi = HIConfig(theta=1.1, capacity_factor=0.5)   # all want offload, half fit
+    eng = build_engine(cfg, hi, max_new_tokens=2, cache_len=32)
+    toks = np.random.default_rng(1).integers(0, cfg.vocab_size,
+                                             (4, 8)).astype(np.int32)
+    out = eng.serve(toks)
+    assert out["served_remote"].sum() == 2
+    assert eng.summary()["dropped"] == 2
+    s = eng.summary()
+    assert s["offload_frac"] == 1.0
+
+
+def test_engine_output_shapes_and_stats():
+    cfg = ARCHS["qwen2-1.5b"].reduced()
+    hi = HIConfig(theta=0.6, capacity_factor=0.5)
+    eng = build_engine(cfg, hi, max_new_tokens=3, cache_len=32)
+    toks = np.random.default_rng(2).integers(0, cfg.vocab_size,
+                                             (4, 8)).astype(np.int32)
+    out = eng.serve(toks)
+    assert out["tokens"].shape == (4, 3)
+    assert out["confidence"].shape == (4,)
+    assert 0 <= eng.summary()["offload_frac"] <= 1
+
+
+def test_engine_online_policy_adapts():
+    """Paper ref [27]: online theta tuning from L-tier feedback.  With a
+    random-init S-tier (never agreeing with L), offloading must look
+    worthwhile, so theta rises toward 1 as batches stream."""
+    from repro.core.policy import OnlineThresholdPolicy
+    from repro.serving.engine import build_engine
+    import jax
+    cfg = ARCHS["gemma3-1b"].reduced()
+    pol = OnlineThresholdPolicy(beta=0.1, grid=32, eta_lr=0.5)
+    hi = HIConfig(theta=0.5, capacity_factor=1.0)
+    eng = build_engine(cfg, hi, max_new_tokens=2, cache_len=32)
+    eng.online_policy = pol
+    rng = np.random.default_rng(3)
+    thetas = [pol.theta]
+    for _ in range(3):
+        toks = rng.integers(0, cfg.vocab_size, (4, 8)).astype(np.int32)
+        eng.serve(toks)
+        thetas.append(pol.theta)
+    # the policy moved (it observed disagreement feedback)
+    assert thetas[-1] != thetas[0] or len(pol.history) > 0

@@ -1,0 +1,115 @@
+"""End-to-end behaviour tests: the paper's central claims hold on the
+synthetic reproductions of its three use cases (trained tiers, calibrated
+threshold, full cascade)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import HIConfig
+from repro.core.calibrate import brute_force_theta
+from repro.core.cascade import classifier_cascade
+from repro.core.confidence import confidence
+from repro.data import images, vibration as vib
+from repro.models import cnn
+from repro.training.cnn_trainer import accuracy, predict_logits, train_cnn
+
+
+@pytest.fixture(scope="module")
+def tiers():
+    """Quickly-trained S/L CNNs on the CIFAR-10 stand-in (module-scoped)."""
+    # patch_amp=0.7 speeds up the L-tier's take-off on the strong cue so the
+    # fixture stays CPU-cheap (measured: S~0.72, L~0.93 at this budget)
+    x_tr, y_tr = images.make_dataset(5000, seed=0, patch_amp=0.7)
+    x_te, y_te = images.make_dataset(1200, seed=5, patch_amp=0.7)
+    ps = train_cnn(cnn.SML_CIFAR, x_tr, y_tr, epochs=2, batch=128)
+    pl = train_cnn(cnn.LML_CIFAR, x_tr, y_tr, epochs=4, batch=128)
+    return ps, pl, x_te, y_te
+
+
+def test_sml_worse_than_lml(tiers):
+    ps, pl, x_te, y_te = tiers
+    s_acc = accuracy(ps, cnn.SML_CIFAR, x_te, y_te)
+    l_acc = accuracy(pl, cnn.LML_CIFAR, x_te, y_te)
+    assert l_acc > s_acc + 0.03, (s_acc, l_acc)
+    assert s_acc > 0.4          # better than chance by far
+
+
+def test_confidence_correlates_with_correctness(tiers):
+    """The property HI relies on (paper Fig. 6): high-p samples are right
+    more often than low-p samples."""
+    ps, _, x_te, y_te = tiers
+    logits = predict_logits(ps, cnn.SML_CIFAR, x_te)
+    conf = np.asarray(confidence(jnp.asarray(logits)))
+    ok = logits.argmax(-1) == y_te
+    hi_mask = conf >= np.median(conf)
+    assert ok[hi_mask].mean() > ok[~hi_mask].mean() + 0.1
+
+
+def test_hi_beats_both_extremes_on_cost(tiers):
+    """Paper Table 1 structure: with calibrated theta*, HI cost < full-offload
+    cost and <= no-offload cost for mid-range beta; accuracy lands between."""
+    ps, pl, x_te, y_te = tiers
+    beta = 0.5
+    s_logits = predict_logits(ps, cnn.SML_CIFAR, x_te)
+    l_logits = predict_logits(pl, cnn.LML_CIFAR, x_te)
+    conf = np.asarray(confidence(jnp.asarray(s_logits)))
+    s_ok = s_logits.argmax(-1) == y_te
+    l_ok = l_logits.argmax(-1) == y_te
+    theta, _ = brute_force_theta(conf, s_ok, beta, l_correct=l_ok)
+
+    hi = HIConfig(theta=float(theta), capacity_factor=1.0)
+    casc = classifier_cascade(
+        lambda p, x: cnn.apply_cnn(p, cnn.SML_CIFAR, x),
+        lambda p, x: cnn.apply_cnn(p, cnn.LML_CIFAR, x), hi)
+    out = casc.infer(ps, pl, jnp.asarray(x_te))
+    pred = np.asarray(out["pred"])
+    served = np.asarray(out["served_remote"])
+    n = len(y_te)
+
+    hi_wrong = (pred != y_te)
+    hi_cost = served.sum() * beta + hi_wrong.sum()
+    full_cost = n * beta + (~l_ok).sum()
+    local_cost = (~s_ok).sum()
+    assert hi_cost < full_cost, (hi_cost, full_cost)
+    assert hi_cost <= local_cost + 1e-9, (hi_cost, local_cost)
+
+    hi_acc = (pred == y_te).mean()
+    assert s_ok.mean() - 0.02 <= hi_acc <= l_ok.mean() + 0.02
+    assert 0.0 < served.mean() < 1.0          # a genuine cascade
+
+
+def _balanced_binary(x, y, seed=0):
+    """Oversample the positive class to 50% (the filter must be trained
+    recall-oriented; with a 10% prior the tiny net collapses to majority)."""
+    b = images.binary_labels(y)
+    pos = np.flatnonzero(b == 1)
+    neg = np.flatnonzero(b == 0)
+    rng = np.random.default_rng(seed)
+    pos_up = rng.choice(pos, size=len(neg), replace=True)
+    idx = rng.permutation(np.concatenate([pos_up, neg]))
+    return x[idx], b[idx]
+
+
+def test_binary_filter_use_case(tiers):
+    """§5 structure: relevance filter keeps most dogs, drops most non-dogs."""
+    _, _, x_te, y_te = tiers
+    x_tr, y_tr = images.make_dataset(2500, seed=1, patch_amp=0.7)
+    xb, bb = _balanced_binary(x_tr, y_tr)
+    pb = train_cnn(cnn.SML_BINARY, xb, bb, epochs=2)
+    p = 1 / (1 + np.exp(-predict_logits(pb, cnn.SML_BINARY, x_te)[:, 0]))
+    offload = p >= 0.5
+    dogs = images.binary_labels(y_te) == 1
+    recall = (offload & dogs).sum() / max(dogs.sum(), 1)
+    offload_frac = offload.mean()
+    assert recall > 0.6, (recall, offload_frac)
+    assert offload_frac < 0.6          # most irrelevant images stay local
+
+
+def test_reb_end_to_end():
+    """§3: threshold S-ML separates perfectly; HI saves ~all bandwidth when
+    machines are mostly normal."""
+    _, labels, means = vib.make_dataset(25, seed=11, normal_fraction=0.95)
+    offload = vib.threshold_sml(means, 0.07)
+    assert (offload == (labels != 0)).all()
+    assert offload.mean() < 0.2

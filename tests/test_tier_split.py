@@ -1,0 +1,28 @@
+"""Tier-split deployment: each tier lowers+compiles on its own pod
+(subprocess: needs 512 forced host devices)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    from repro.configs.registry import ARCHS
+    from repro.configs.base import SHAPES
+    from repro.launch.tier_split import lower_tier_split
+    r = lower_tier_split(ARCHS["qwen2-1.5b"], SHAPES["decode_32k"],
+                         capacity_factor=0.5)
+    assert r.s_compile["chips"] == 256 and r.l_compile["chips"] == 256
+    assert r.s_compile["peak_gb_per_device"] < r.l_compile["peak_gb_per_device"]
+    assert 0 < r.beta_bytes_per_step < 1e9
+    print("TIER_SPLIT_OK", r.beta_bytes_per_step)
+""")
+
+
+def test_tier_split_lowers_both_pods():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=540)
+    assert "TIER_SPLIT_OK" in out.stdout, out.stdout + out.stderr

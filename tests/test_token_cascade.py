@@ -1,0 +1,54 @@
+"""Block-granularity token-level HI (serving/token_cascade.py)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import HIConfig
+from repro.configs.registry import ARCHS
+from repro.serving.token_cascade import build_token_cascade
+
+
+def _pure_greedy(tc, params, cfg, prompt, steps):
+    from repro.serving.token_cascade import _feed_tokens, _draft_block
+    import jax.numpy as jnp
+    from repro.models import model_zoo
+    cache = model_zoo.init_cache(cfg, prompt.shape[0], tc.cache_len)
+    cache, logits = _feed_tokens(params, cfg, cache, jnp.asarray(prompt))
+    toks, _, _, _ = _draft_block(params, cfg, cache, logits, steps,
+                                 "max_prob")
+    return np.asarray(toks)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ARCHS["gemma3-1b"].reduced()
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, (2, 6)).astype(np.int32)
+    return cfg, prompt
+
+
+def test_never_escalate_equals_pure_s(setup):
+    cfg, prompt = setup
+    tc = build_token_cascade(cfg, HIConfig(theta=0.0), block=3, cache_len=32)
+    out = tc.generate(prompt, num_blocks=2)
+    assert out["escalated"] == 0
+    ref = _pure_greedy(tc, tc.s_params, tc.s_cfg, prompt, 6)
+    np.testing.assert_array_equal(out["tokens"], ref)
+
+
+def test_always_escalate_equals_pure_l(setup):
+    cfg, prompt = setup
+    tc = build_token_cascade(cfg, HIConfig(theta=1.1), block=3, cache_len=32)
+    out = tc.generate(prompt, num_blocks=2)
+    assert out["escalated"] == 2
+    assert out["escalation_frac"] == 1.0
+    ref = _pure_greedy(tc, tc.l_params, tc.l_cfg, prompt, 6)
+    np.testing.assert_array_equal(out["tokens"], ref)
+
+
+def test_intermediate_theta_counts(setup):
+    cfg, prompt = setup
+    tc = build_token_cascade(cfg, HIConfig(theta=0.5), block=3, cache_len=32)
+    out = tc.generate(prompt, num_blocks=3)
+    assert out["tokens"].shape == (2, 9)
+    assert 0 <= out["escalated"] <= 3
