@@ -8,7 +8,8 @@ import sys
 import traceback
 
 from benchmarks import (bench_fig8, bench_kernels, bench_partitioning,
-                        bench_reb, bench_roofline, bench_table1, bench_table3)
+                        bench_reb, bench_roofline, bench_serving,
+                        bench_table1, bench_table3)
 
 ALL = {
     "table1": bench_table1,        # paper Table 1 (CIFAR-10 HI costs)
@@ -18,6 +19,7 @@ ALL = {
     "reb": bench_reb,              # §3 Figs 4-5 (REB thresholds, bandwidth)
     "kernels": bench_kernels,      # Pallas kernels vs oracles
     "roofline": bench_roofline,    # dry-run roofline table (deliverable g)
+    "serving": bench_serving,      # HI engine: device-resident vs legacy
 }
 
 

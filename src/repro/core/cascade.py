@@ -77,7 +77,14 @@ class HICascade:
         }
 
     def infer_jit(self) -> Callable:
-        return jax.jit(self.infer)
+        """Jitted :meth:`infer`, cached on the instance: repeated calls reuse
+        one jit wrapper (and its executable cache) instead of rebuilding it —
+        the same no-silent-retrace discipline as ``HIEngine._exec``."""
+        fn = getattr(self, "_infer_jit", None)
+        if fn is None:
+            fn = jax.jit(self.infer)
+            object.__setattr__(self, "_infer_jit", fn)   # frozen dataclass
+        return fn
 
 
 def classifier_cascade(s_apply: ApplyFn, l_apply: ApplyFn, hi: HIConfig,

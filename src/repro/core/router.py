@@ -59,5 +59,19 @@ def scatter_merge(s_out: jnp.ndarray, l_out: jnp.ndarray,
     return s_out.at[decision.indices].set(upd)
 
 
+def agreement(s_out: jnp.ndarray, l_out: jnp.ndarray,
+              decision: RouteDecision) -> jnp.ndarray:
+    """Per-slot S/L agreement over the gathered batch -> (C,) bool.
+
+    The online-policy correctness proxy (paper ref [27]): the ED never sees
+    ground truth, so S-tier/L-tier agreement on the escalated samples stands
+    in for it.  Computed on device so the serving engine's single post-cascade
+    host fetch covers it.
+    """
+    s_sub = s_out[decision.indices]
+    axes = tuple(range(1, l_out.ndim))
+    return (s_sub == l_out).all(axis=axes) if axes else s_sub == l_out
+
+
 def capacity_for(batch: int, capacity_factor: float) -> int:
     return max(1, min(batch, int(round(batch * capacity_factor))))

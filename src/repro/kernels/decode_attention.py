@@ -73,11 +73,9 @@ def decode_attention_pallas(q: jnp.ndarray, cache_k: jnp.ndarray,
     s, kh = cache_k.shape[1], cache_k.shape[2]
     g = h // kh
     qg = q.reshape(b, kh, g, d)
-    if s % block_s:
-        block_s = math.gcd(s, block_s) if s % block_s else block_s
-        while s % block_s:
-            block_s //= 2
-        block_s = max(block_s, 1)
+    # largest divisor of S not exceeding the requested tile; block_s == s
+    # simply yields a single-step grid (nsb == 1)
+    block_s = math.gcd(s, block_s)
     nsb = s // block_s
     mask = jnp.broadcast_to(valid.astype(jnp.int32)[None, :], (b, s))
 

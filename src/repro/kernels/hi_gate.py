@@ -34,8 +34,9 @@ def _pick_block_n(n: int, c: int, itemsize: int) -> int:
     return max(rows, 1)
 
 
-def _kernel(logits_ref, conf_ref, pred_ref, off_ref, *, theta: float,
+def _kernel(logits_ref, theta_ref, conf_ref, pred_ref, off_ref, *,
             metric: str):
+    theta = theta_ref[0, 0]
     x = logits_ref[...].astype(jnp.float32)                    # (bn, C)
     c = x.shape[-1]
     m = jnp.max(x, axis=-1, keepdims=True)
@@ -65,18 +66,25 @@ def _kernel(logits_ref, conf_ref, pred_ref, off_ref, *, theta: float,
     off_ref[...] = (conf < theta).astype(jnp.int32)
 
 
-def hi_gate_pallas(logits: jnp.ndarray, theta: float, metric: str = "max_prob",
+def hi_gate_pallas(logits: jnp.ndarray, theta, metric: str = "max_prob",
                    interpret: bool = True
                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """logits: (N, C) -> (conf (N,) f32, pred (N,) i32, offload (N,) i32)."""
+    """logits: (N, C) -> (conf (N,) f32, pred (N,) i32, offload (N,) i32).
+
+    ``theta`` may be a python float or a traced fp32 scalar — it enters the
+    kernel as a (1, 1) operand (broadcast to every grid step), so online
+    policies can move the threshold every batch without recompiling.
+    """
     n, c = logits.shape
     bn = _pick_block_n(n, c, logits.dtype.itemsize)
     grid = (n // bn,)
-    kernel = functools.partial(_kernel, theta=float(theta), metric=metric)
+    theta_arr = jnp.asarray(theta, jnp.float32).reshape(1, 1)
+    kernel = functools.partial(_kernel, metric=metric)
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[pl.BlockSpec((bn, c), lambda i: (i, 0))],
+        in_specs=[pl.BlockSpec((bn, c), lambda i: (i, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
         out_specs=[
             pl.BlockSpec((bn,), lambda i: (i,)),
             pl.BlockSpec((bn,), lambda i: (i,)),
@@ -88,4 +96,4 @@ def hi_gate_pallas(logits: jnp.ndarray, theta: float, metric: str = "max_prob",
             jax.ShapeDtypeStruct((n,), jnp.int32),
         ],
         interpret=interpret,
-    )(logits)
+    )(logits, theta_arr)

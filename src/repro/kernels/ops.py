@@ -20,10 +20,15 @@ from repro.kernels import ssd_scan as _ssd
 INTERPRET = True    # CPU container: validate kernel bodies via interpreter
 
 
-@functools.partial(jax.jit, static_argnames=("theta", "metric"))
-def hi_gate(logits: jnp.ndarray, theta: float, metric: str = "max_prob"
+@functools.partial(jax.jit, static_argnames=("metric",))
+def hi_gate(logits: jnp.ndarray, theta, metric: str = "max_prob"
             ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Fused confidence + argmax + threshold.  logits: (N, C)."""
+    """Fused confidence + argmax + threshold.  logits: (N, C).
+
+    ``theta`` is a TRACED operand (python float or fp32 scalar array): the
+    serving engine's online policy moves it every batch, and a static theta
+    would force a recompile per update.
+    """
     return _hg.hi_gate_pallas(logits, theta, metric, interpret=INTERPRET)
 
 

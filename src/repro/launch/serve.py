@@ -2,6 +2,8 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
       --requests 32 --batch 8 --theta 0.6
+
+``--no-reduced`` runs the full assigned config (TPU-sized; not CPU-friendly).
 """
 from __future__ import annotations
 
@@ -18,7 +20,8 @@ from repro.serving.engine import build_engine
 
 def run(arch: str, *, reduced: bool = True, requests: int = 32, batch: int = 8,
         theta: float = 0.6, capacity_factor: float = 0.5, seed: int = 0,
-        max_new_tokens: int = 8, metric: str = "max_prob"):
+        max_new_tokens: int = 8, metric: str = "max_prob",
+        legacy: bool = False):
     cfg = ARCHS[arch]
     if reduced:
         cfg = cfg.reduced()
@@ -27,6 +30,7 @@ def run(arch: str, *, reduced: bool = True, requests: int = 32, batch: int = 8,
                          f"{cfg.family} is exercised via dryrun + smoke tests")
     hi = HIConfig(theta=theta, capacity_factor=capacity_factor, metric=metric)
     engine = build_engine(cfg, hi, max_new_tokens=max_new_tokens, cache_len=64)
+    serve = engine.serve_legacy if legacy else engine.serve
 
     rng = np.random.default_rng(seed)
     batcher = Batcher(batch_size=batch, buckets=(16, 32))
@@ -39,31 +43,41 @@ def run(arch: str, *, reduced: bool = True, requests: int = 32, batch: int = 8,
     served = 0
     while batcher.queue:
         b = batcher.next_batch()
-        out = engine.serve(b.tokens)
+        out = serve(b.tokens)
         served += int((b.request_ids >= 0).sum())
         print(f"batch: offloaded {int(out['offloaded'].sum())}/{len(b.tokens)} "
               f"mean_conf {out['confidence'].mean():.3f}")
     dt = time.time() - t0
     s = engine.summary()
-    print(f"served {served} requests in {dt:.1f}s | offload_frac "
+    print(f"served {served} requests in {dt:.1f}s "
+          f"({served / max(dt, 1e-9):.1f} req/s) | offload_frac "
           f"{s['offload_frac']:.2%} drop_frac {s['drop_frac']:.2%} | "
-          f"S-tier {s['s_time']:.2f}s L-tier {s['l_time']:.2f}s")
+          f"cascade time {s['serve_time']:.2f}s, {int(s['compiles'])} "
+          f"compiled shapes")
     return s
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
-    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="smoke-scale config (disable with --no-reduced)")
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--theta", type=float, default=0.6)
     ap.add_argument("--capacity-factor", type=float, default=0.5)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--metric", default="max_prob",
                     choices=["max_prob", "margin", "entropy"])
+    ap.add_argument("--legacy", action="store_true",
+                    help="use the pre-batched-prefill reference path")
     args = ap.parse_args()
-    run(args.arch, requests=args.requests, batch=args.batch, theta=args.theta,
-        capacity_factor=args.capacity_factor, metric=args.metric)
+    run(args.arch, reduced=args.reduced, requests=args.requests,
+        batch=args.batch, theta=args.theta,
+        capacity_factor=args.capacity_factor,
+        max_new_tokens=args.max_new_tokens, metric=args.metric,
+        legacy=args.legacy)
 
 
 if __name__ == "__main__":

@@ -142,3 +142,53 @@ def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
     h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
     logits = (h[:, 0, :] @ params["lm_head"]).astype(jnp.float32)
     return logits, {"state": ns, "conv": ncw, "k": nk, "v": nv, "pos": pos + 1}
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            cache: Params, *, use_kernel: bool = False
+            ) -> Tuple[jnp.ndarray, Params]:
+    """Consume the whole (B, S) prompt in one batched pass, writing the SSM
+    states, conv windows, and the per-group shared-attention KV slots.
+    ``cache`` supplies the buffers and is overwritten (donation-safe).
+
+    Returns (last-token logits (B, V) fp32, filled cache).
+    """
+    h = params["embed"][tokens]
+    b, s, _ = h.shape
+    sp = params["shared_attn"]
+    hd = cfg.resolved_head_dim
+    conv_dtype = cache["conv"].dtype
+    kv_dtype = cache["k"].dtype
+    pos = jnp.arange(s)
+
+    def inner(carry, lp):
+        x = carry
+        y, st, cw = mamba2.mamba_block_prefill(
+            lp, cfg, L.rmsnorm(lp["ln"], x, cfg.norm_eps),
+            use_kernel=use_kernel, conv_dtype=conv_dtype)
+        return x + y, (st, cw)
+
+    def outer(carry, xs):
+        x = carry
+        gp, ck, cv = xs
+        x, (st_g, cw_g) = lax.scan(inner, x, gp)
+        xn = L.rmsnorm(sp["ln1"], x, cfg.norm_eps)
+        q, k, v = L._qkv(sp["attn"], xn, cfg.num_heads, cfg.num_kv_heads, hd)
+        if cfg.rope_theta > 0:
+            q = L.apply_rope(q, pos, cfg.rope_theta)
+            k = L.apply_rope(k, pos, cfg.rope_theta)
+        k = k.astype(kv_dtype)
+        v = v.astype(kv_dtype)
+        a = L._sdpa(q, k, v, L.causal_window_mask(s, s))
+        x = x + a.reshape(b, s, cfg.num_heads * hd) @ sp["attn"]["wo"]
+        x = x + L.swiglu(sp["mlp"], L.rmsnorm(sp["ln2"], x, cfg.norm_eps))
+        ck = lax.dynamic_update_slice(ck, k, (0, 0, 0, 0))
+        cv = lax.dynamic_update_slice(cv, v, (0, 0, 0, 0))
+        return act.shard_hidden(x), (st_g, cw_g, ck, cv)
+
+    h, (ns, ncw, nk, nv) = lax.scan(
+        outer, act.shard_hidden(h), (params["layers"], cache["k"], cache["v"]))
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = (h[:, -1, :] @ params["lm_head"]).astype(jnp.float32)
+    return logits, {"state": ns, "conv": ncw, "k": nk, "v": nv,
+                    "pos": jnp.asarray(s, jnp.int32)}

@@ -130,7 +130,10 @@ def causal_conv_step(window: jnp.ndarray, x_t: jnp.ndarray, w: jnp.ndarray,
     Returns (y_t (B, 1, C), new window)."""
     full = jnp.concatenate([window, x_t], axis=1)                        # (B, W, C)
     y = jnp.einsum("bwc,wc->bc", full, w) + b
-    return y[:, None, :], full[:, 1:, :]
+    # keep the rolled window in the cache dtype: the concat above promotes to
+    # the (fp32) activation dtype, which would change the decode-scan carry
+    # type step-over-step and break jitted generation loops
+    return y[:, None, :], full[:, 1:, :].astype(window.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -185,6 +188,39 @@ def mamba_block(lp: Params, cfg: ModelConfig, x: jnp.ndarray,
     y = y.reshape(b, l, di)
     y = L.rmsnorm(lp["norm"], y * jax.nn.silu(z), cfg.norm_eps)
     return y @ lp["out_proj"]
+
+
+def mamba_block_prefill(lp: Params, cfg: ModelConfig, x: jnp.ndarray, *,
+                        use_kernel: bool = False, conv_dtype=jnp.bfloat16
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full-sequence mamba2 block that also emits the decode-cache entries.
+
+    Returns (y (B, L, D), final SSM state (B, H, P, N) fp32, conv window
+    (B, W-1, conv_dim)).  The conv window holds the last W-1 *raw*
+    (pre-activation) conv inputs, zero-padded on the left for short prompts —
+    exactly the state :func:`causal_conv_step` would have accumulated.
+    """
+    b, l, _ = x.shape
+    di, n, h, p = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_head_dim
+    W = cfg.ssm_conv_width
+    zxbcdt = x @ lp["in_proj"]
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    win = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))[:, l:, :].astype(conv_dtype)
+    xbc = jax.nn.silu(causal_conv(xbc, lp["conv_w"], lp["conv_b"]))
+    xs = xbc[..., :di].reshape(b, l, h, p)
+    B = xbc[..., di:di + n]
+    C = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+    A = -jnp.exp(lp["A_log"])
+    if use_kernel:
+        from repro.kernels import ops as kops
+        y, state = kops.ssd(xs, dt, A, B, C, chunk=cfg.ssm_chunk)
+    else:
+        y, state = ssd_chunked(xs, dt, A, B, C, chunk=cfg.ssm_chunk)
+    y = y + lp["D"].astype(y.dtype)[None, None, :, None] * xs
+    y = y.reshape(b, l, di)
+    y = L.rmsnorm(lp["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ lp["out_proj"], state, win
 
 
 def mamba_block_step(lp: Params, cfg: ModelConfig, x: jnp.ndarray,
@@ -276,3 +312,30 @@ def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
     h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
     logits = (h[:, 0, :] @ params["lm_head"]).astype(jnp.float32)
     return logits, {"state": ns, "conv": ncw, "pos": cache["pos"] + 1}
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            cache: Params, *, use_kernel: bool = False
+            ) -> Tuple[jnp.ndarray, Params]:
+    """Consume the whole (B, S) prompt with the chunked SSD pass and write the
+    per-layer recurrent state + conv window.  ``cache`` supplies shapes/dtypes
+    and is fully overwritten (donation-safe).
+
+    Returns (last-token logits (B, V) fp32, filled cache).
+    """
+    s = tokens.shape[1]
+    conv_dtype = cache["conv"].dtype
+    h = params["embed"][tokens]
+
+    def body(carry, lp):
+        x = act.shard_hidden(carry)
+        y, st, cw = mamba_block_prefill(lp, cfg,
+                                        L.rmsnorm(lp["ln"], x, cfg.norm_eps),
+                                        use_kernel=use_kernel,
+                                        conv_dtype=conv_dtype)
+        return act.shard_hidden(x + y), (st, cw)
+
+    h, (ns, ncw) = lax.scan(body, h, params["layers"])
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = (h[:, -1, :] @ params["lm_head"]).astype(jnp.float32)
+    return logits, {"state": ns, "conv": ncw, "pos": jnp.asarray(s, jnp.int32)}

@@ -110,6 +110,27 @@ def cache_spec(cfg: ModelConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
     return jax.eval_shape(lambda: init_cache(cfg, batch, seq_len, dtype))
 
 
+def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray, cache, *,
+            use_kernel: bool = False, patch_embeds=None):
+    """Batched prompt ingestion: ONE forward-style pass over the whole (B, S)
+    prompt that writes the decode cache — replacing O(S) sequential
+    ``decode_step`` dispatches.  ``cache`` (from :func:`init_cache`) supplies
+    the buffers and is fully overwritten, so callers may donate it.
+
+    Returns (last-token logits (B, V) fp32, filled cache).
+    """
+    if cfg.family in (DENSE, VLM):
+        return transformer.prefill(params, cfg, tokens, cache,
+                                   patch_embeds=patch_embeds)
+    if cfg.family == MOE:
+        return moe.prefill(params, cfg, tokens, cache)
+    if cfg.family == SSM:
+        return mamba2.prefill(params, cfg, tokens, cache, use_kernel=use_kernel)
+    if cfg.family == HYBRID:
+        return hybrid.prefill(params, cfg, tokens, cache, use_kernel=use_kernel)
+    raise ValueError(f"prefill not supported for family {cfg.family!r}")
+
+
 def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray, cache, *,
                 use_kernel: bool = False):
     if cfg.family in (DENSE, VLM):

@@ -339,3 +339,48 @@ def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
     h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
     logits = (h[:, 0, :] @ params["lm_head"]).astype(jnp.float32)
     return logits, {"k": nk, "v": nv, "pos": pos + 1}
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            cache: Params, *, capacity_factor: float = 2.0
+            ) -> Tuple[jnp.ndarray, Params]:
+    """Consume the whole (B, S) prompt in one batched pass and write the KV
+    cache.  ``capacity_factor`` defaults to the decode-path value so routed
+    dispatch behaves like generation, not training.  ``cache`` supplies the
+    buffers and is overwritten (donation-safe).
+
+    Returns (last-token logits (B, V) fp32, filled cache).
+    """
+    h = params["embed"][tokens]
+    b, s, _ = h.shape
+    hd = cfg.resolved_head_dim
+    kv_dtype = cache["k"].dtype
+    win = jnp.asarray(s, jnp.int32)
+    pos = jnp.arange(s)
+    mask = L.causal_window_mask(s, s, window=win)
+
+    def body(carry, lp):
+        x = act.shard_hidden(carry)
+        xq = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        q, k, v = L._qkv(lp["attn"], xq, cfg.num_heads, cfg.num_kv_heads, hd)
+        if cfg.rope_theta > 0:
+            q = L.apply_rope(q, pos, cfg.rope_theta)
+            k = L.apply_rope(k, pos, cfg.rope_theta)
+        k = k.astype(kv_dtype)
+        v = v.astype(kv_dtype)
+        a = L._sdpa(q, k, v, mask)
+        x = x + a.reshape(b, s, cfg.num_heads * hd) @ lp["attn"]["wo"]
+        xn = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        y, _ = moe_ffn_auto(lp, cfg, xn, capacity_factor)
+        if "shared" in lp:
+            y = y + L.swiglu(lp["shared"], xn)
+        if "dense" in lp:
+            y = y + L.swiglu(lp["dense"], xn)
+        return act.shard_hidden(x + y), (k, v)
+
+    h, (ks, vs) = lax.scan(body, h, params["layers"])
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = (h[:, -1, :] @ params["lm_head"]).astype(jnp.float32)
+    new_k = lax.dynamic_update_slice(cache["k"], ks, (0, 0, 0, 0, 0))
+    new_v = lax.dynamic_update_slice(cache["v"], vs, (0, 0, 0, 0, 0))
+    return logits, {"k": new_k, "v": new_v, "pos": jnp.asarray(s, jnp.int32)}

@@ -277,18 +277,23 @@ def decode_step_split(params: Params, cfg: ModelConfig, token: jnp.ndarray,
 
 
 def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
-            cache_len: int, *, patch_embeds: Optional[jnp.ndarray] = None
+            cache: Params, *, patch_embeds: Optional[jnp.ndarray] = None
             ) -> Tuple[jnp.ndarray, Params]:
-    """Fill the KV cache from a prompt; returns (last-token logits, cache).
+    """Fill the KV cache from a (B, S) prompt in ONE batched pass.
 
-    Implemented as a full forward that also emits per-layer K/V, then pads the
-    cache to ``cache_len``.
+    ``cache`` (from :func:`init_cache`) supplies the buffers; its contents are
+    fully overwritten, so callers may donate it across requests.  K/V are
+    rounded to the cache dtype *before* the in-pass attention so logits and
+    cache match the token-by-token :func:`decode_step` path exactly.
+
+    Returns (last-token logits (B, V) fp32, filled cache).
     """
     h = params["embed"][tokens]
     if patch_embeds is not None:
         h = jnp.concatenate([patch_embeds.astype(h.dtype), h], axis=1)
     b, s, _ = h.shape
     windows = layer_windows(cfg, s)
+    kv_dtype = cache["k"].dtype
 
     def body(carry, xs):
         lp, win = xs
@@ -300,6 +305,8 @@ def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
             pos = jnp.arange(s)
             q = L.apply_rope(q, pos, cfg.rope_theta)
             k = L.apply_rope(k, pos, cfg.rope_theta)
+        k = k.astype(kv_dtype)
+        v = v.astype(kv_dtype)
         qc = 512 if (s > 512 and s % 512 == 0) else s
         if s > qc:
             a = L.chunked_attention(q, k, v, q_chunk=qc, causal=True, window=win)
@@ -314,8 +321,8 @@ def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
     h, (ks, vs) = lax.scan(body, h, (params["layers"], windows))
     h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
     logits = (h[:, -1, :] @ params["lm_head"]).astype(jnp.float32)
-    pad = cache_len - s
-    ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.bfloat16)
-    vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(jnp.bfloat16)
-    cache = {"k": ks, "v": vs, "pos": jnp.asarray(s, jnp.int32)}
-    return logits, cache
+    # write the prompt K/V into the provided buffers; the tail past ``s`` is
+    # never read (decode masks positions > pos), so stale values are fine
+    new_k = lax.dynamic_update_slice(cache["k"], ks, (0, 0, 0, 0, 0))
+    new_v = lax.dynamic_update_slice(cache["v"], vs, (0, 0, 0, 0, 0))
+    return logits, {"k": new_k, "v": new_v, "pos": jnp.asarray(s, jnp.int32)}

@@ -1,10 +1,32 @@
 """HI serving engine: the paper's ED/ES cascade over LM requests.
 
 The S-tier (reduced variant of the same family) prefills + decodes every
-request; per-request confidence (mean token confidence from the fused
-hi_gate) drives the paper's threshold rule; complex requests escalate to the
-L-tier through the static-capacity router.  On a pod mesh the escalation
-gather is the ED→ES offload link (DESIGN.md §2).
+request; per-request confidence (mean token confidence, fused hi_gate when
+``use_kernel``) drives the paper's threshold rule; complex requests escalate
+to the L-tier through the static-capacity router.  On a pod mesh the
+escalation gather is the ED→ES offload link (DESIGN.md §2).
+
+Dispatch-count model (the serving hot path is device-resident)
+--------------------------------------------------------------
+One ``serve()`` call is ONE compiled XLA program per (batch, bucket) shape:
+
+* prefill      = 1 batched pass over the whole (B, S) prompt (not O(S)
+  sequential ``decode_step`` dispatches),
+* decode       = ``max_new_tokens`` steps inside a single ``lax.scan``,
+* cascade      = 2 tiers: the S-tier generate, the on-device route/gather,
+  and the L-tier generate all live in the SAME jitted function, so the S→L
+  escalation never materialises NumPy arrays.
+
+Host synchronisation happens exactly once per call, *after* the cascade, via
+the module-level ``_host_fetch`` (tests monkeypatch it to assert the single
+sync point).  Per-shape executables are AOT-compiled and cached in
+``HIEngine._exec`` so bucket switching never silently retraces, and both
+tiers' cache buffers are donated (``donate_argnums``) so XLA reuses the
+allocations across requests.
+
+``benchmarks/bench_serving.py`` measures this path against the legacy
+token-by-token loop (kept below as :func:`_decode_loop` + ``serve_legacy``)
+and writes the requests/sec + prefill/decode split to ``BENCH_serving.json``.
 
 This module is deliberately generic over family — it only needs the
 model_zoo API — and is exercised end-to-end on CPU with reduced configs by
@@ -13,20 +35,24 @@ model_zoo API — and is exercised end-to-end on CPU with reduced configs by
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+import warnings
+from dataclasses import dataclass
 from functools import partial
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import HIConfig, ModelConfig
-from repro.core import confidence as _c_unused  # noqa: F401 (keep pkg init)
 from repro.core.confidence import confidence as _confidence
 from repro.core import router as router_mod
 from repro.models import model_zoo
 from repro.serving import sampler
+
+# The engine's single device→host sync point.  Kept as a module-level
+# indirection so tests can wrap it and count synchronisations per serve().
+_host_fetch = jax.device_get
 
 
 @dataclass
@@ -38,9 +64,11 @@ class TierModel:
 def _decode_loop(params, cfg: ModelConfig, tokens: jnp.ndarray,
                  cache_len: int, steps: int, metric: str,
                  use_kernel: bool = False):
-    """Prefill (token-by-token for family-uniformity) + greedy decode.
+    """LEGACY path: token-by-token prefill + greedy decode.
 
-    Returns (generated (B, steps), mean confidence (B,)).
+    Kept as the reference for the prefill-equivalence tests and as the
+    baseline ``benchmarks/bench_serving.py`` measures the batched path
+    against.  Returns (generated (B, steps), mean confidence (B,)).
     """
     b, s = tokens.shape
     cache = model_zoo.init_cache(cfg, b, cache_len)
@@ -66,58 +94,200 @@ def _decode_loop(params, cfg: ModelConfig, tokens: jnp.ndarray,
     return toks.T, confs.mean(axis=0)
 
 
+def _generate(params, cfg: ModelConfig, tokens: jnp.ndarray, cache, *,
+              steps: int, metric: str, theta, use_kernel: bool = False):
+    """Batched prefill + greedy decode, fully on device.
+
+    ``cache`` is overwritten by the prefill (callers donate it).  Returns
+    (generated (B, steps), mean confidence (B,), cache).
+    """
+    logits, cache = model_zoo.prefill(params, cfg, tokens, cache,
+                                      use_kernel=use_kernel)
+
+    def gen_body(carry, _):
+        cache, logits = carry
+        if use_kernel:
+            from repro.kernels import ops as kops
+            conf = kops.hi_gate(logits, theta, metric=metric)[0]
+        else:
+            conf = _confidence(logits, metric)
+        tok = sampler.greedy(logits)
+        logits, cache = model_zoo.decode_step(params, cfg, tok[:, None], cache)
+        return (cache, logits), (tok, conf)
+
+    (cache, _), (toks, confs) = jax.lax.scan(gen_body, (cache, logits), None,
+                                             length=steps)
+    return toks.T, confs.mean(axis=0), cache
+
+
+def _make_cascade(s_cfg: ModelConfig, l_cfg: ModelConfig, hi: HIConfig,
+                  steps: int, capacity: int, use_kernel: bool):
+    """Build the single jitted S→L cascade for one (batch, bucket) shape.
+
+    Everything between the two tier forwards — confidence, threshold,
+    route/gather, scatter-merge, agreement stats — stays on device; the
+    caller pulls the result dict once, asynchronously, at the end.
+    """
+
+    def cascade(s_params, l_params, tokens, theta, s_cache, l_cache):
+        s_toks, s_conf, s_cache = _generate(
+            s_params, s_cfg, tokens, s_cache, steps=steps, metric=hi.metric,
+            theta=theta, use_kernel=use_kernel)
+        offload = s_conf < theta
+        decision = router_mod.route(offload, s_conf, capacity)
+        complex_tokens = router_mod.gather(tokens, decision)
+        l_toks, _, l_cache = _generate(
+            l_params, l_cfg, complex_tokens, l_cache, steps=steps,
+            metric=hi.metric, theta=theta, use_kernel=use_kernel)
+        merged = router_mod.scatter_merge(s_toks, l_toks, decision)
+        agree = router_mod.agreement(s_toks, l_toks, decision)
+        out = {
+            "tokens": merged,
+            "s_tokens": s_toks,
+            "confidence": s_conf,
+            "offloaded": decision.offload_mask,
+            "served_remote": decision.served_remote,
+            "dropped": decision.dropped,
+            "l_indices": decision.indices,
+            "l_valid": decision.valid,
+            "l_agree": agree,
+        }
+        return out, s_cache, l_cache
+
+    return cascade
+
+
 class HIEngine:
-    """Two-tier cascade engine.
+    """Two-tier cascade engine with a device-resident hot path.
 
     ``online_policy`` (paper ref [27], Moothedath et al.): when set, theta is
     tuned online from the L-tier's feedback on offloaded requests — S-tier
     agreement with the L-tier output is the correctness proxy (the ED never
     sees ground truth).  The engine then uses policy.theta instead of the
-    static hi.theta.
+    static hi.theta; theta is a *traced* scalar so policy updates never force
+    a recompile.
     """
 
     def __init__(self, s_tier: TierModel, l_tier: TierModel, hi: HIConfig,
                  cache_len: int = 128, max_new_tokens: int = 8,
-                 online_policy=None):
+                 online_policy=None, use_kernel: bool = False):
         self.s = s_tier
         self.l = l_tier
         self.hi = hi
         self.online_policy = online_policy
         self.cache_len = cache_len
         self.max_new_tokens = max_new_tokens
-        self._s_step = jax.jit(partial(_decode_loop, cfg=self.s.cfg,
-                                       cache_len=cache_len,
-                                       steps=max_new_tokens, metric=hi.metric))
-        self._l_step = jax.jit(partial(_decode_loop, cfg=self.l.cfg,
-                                       cache_len=cache_len,
-                                       steps=max_new_tokens, metric=hi.metric))
+        self.use_kernel = use_kernel
+        # (batch, bucket) -> [compiled executable, s_cache, l_cache]
+        self._exec: Dict[Tuple[int, int], list] = {}
+        self._legacy = None
         self.stats: Dict[str, float] = {
             "requests": 0, "offloaded": 0, "dropped": 0,
-            "s_time": 0.0, "l_time": 0.0}
+            "serve_time": 0.0, "compiles": 0}
+
+    # -- executable cache ---------------------------------------------------
+
+    def _executable(self, b: int, s: int) -> list:
+        """AOT-compile (once) the cascade for a (batch, bucket) shape and
+        allocate the donated per-shape cache buffers."""
+        key = (b, s)
+        ent = self._exec.get(key)
+        if ent is not None:
+            return ent
+        if s + self.max_new_tokens > self.cache_len:
+            raise ValueError(
+                f"bucket {s} + max_new_tokens {self.max_new_tokens} exceeds "
+                f"cache_len {self.cache_len}")
+        cap = router_mod.capacity_for(b, self.hi.capacity_factor)
+        fn = jax.jit(_make_cascade(self.s.cfg, self.l.cfg, self.hi,
+                                   self.max_new_tokens, cap, self.use_kernel),
+                     donate_argnums=(4, 5))
+        s_cache = model_zoo.init_cache(self.s.cfg, b, self.cache_len)
+        l_cache = model_zoo.init_cache(self.l.cfg, cap, self.cache_len)
+        spec = partial(jax.tree.map,
+                       lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype))
+        with warnings.catch_warnings():
+            # buffer donation is a no-op on the CPU backend; stay quiet there
+            warnings.filterwarnings("ignore", message=".*[Dd]onat")
+            compiled = fn.lower(
+                spec(self.s.params), spec(self.l.params),
+                jax.ShapeDtypeStruct((b, s), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.float32),
+                spec(s_cache), spec(l_cache)).compile()
+        self.stats["compiles"] += 1
+        ent = [compiled, s_cache, l_cache]
+        self._exec[key] = ent
+        return ent
+
+    # -- serving ------------------------------------------------------------
 
     def serve(self, tokens: np.ndarray) -> Dict[str, np.ndarray]:
-        """tokens: (B, S) prompt batch -> generations + offload accounting."""
+        """tokens: (B, S) prompt batch -> generations + offload accounting.
+
+        One compiled-program dispatch; host sync happens exactly once, after
+        the full cascade, via ``_host_fetch``.
+        """
+        b, s = tokens.shape
+        ent = self._executable(b, s)
+        theta = jnp.asarray(
+            self.online_policy.theta if self.online_policy is not None
+            else self.hi.theta, jnp.float32)
+        t0 = time.perf_counter()
+        with warnings.catch_warnings():
+            warnings.filterwarnings("ignore", message=".*[Dd]onat")
+            out, ent[1], ent[2] = ent[0](
+                self.s.params, self.l.params,
+                jnp.asarray(tokens, jnp.int32), theta, ent[1], ent[2])
+        host = _host_fetch(out)       # the single device→host sync point
+        t1 = time.perf_counter()
+
+        if self.online_policy is not None:
+            # L-tier agreement on served requests is the correctness proxy
+            served = host["l_valid"]
+            if served.any():
+                self.online_policy.update(
+                    host["confidence"][host["l_indices"][served]],
+                    host["l_agree"][served])
+
+        self.stats["requests"] += b
+        self.stats["offloaded"] += int(host["offloaded"].sum())
+        self.stats["dropped"] += int(host["dropped"])
+        self.stats["serve_time"] += t1 - t0
+        return {k: host[k] for k in ("tokens", "s_tokens", "confidence",
+                                     "offloaded", "served_remote")}
+
+    def serve_legacy(self, tokens: np.ndarray) -> Dict[str, np.ndarray]:
+        """Pre-batched-prefill reference path: per-token scan prefill, NumPy
+        routing round-trip, and a host sync per tier.  Benchmarked against
+        ``serve`` by ``benchmarks/bench_serving.py``; not used in production.
+        """
+        if self._legacy is None:
+            self._legacy = (
+                jax.jit(partial(_decode_loop, cfg=self.s.cfg,
+                                cache_len=self.cache_len,
+                                steps=self.max_new_tokens,
+                                metric=self.hi.metric)),
+                jax.jit(partial(_decode_loop, cfg=self.l.cfg,
+                                cache_len=self.cache_len,
+                                steps=self.max_new_tokens,
+                                metric=self.hi.metric)))
+        s_step, l_step = self._legacy
         b = tokens.shape[0]
         cap = router_mod.capacity_for(b, self.hi.capacity_factor)
         t0 = time.perf_counter()
-        s_out, s_conf = self._s_step(self.s.params, tokens=jnp.asarray(tokens))
+        s_out, s_conf = s_step(self.s.params, tokens=jnp.asarray(tokens))
         s_out.block_until_ready()
-        t1 = time.perf_counter()
-
         theta = (self.online_policy.theta if self.online_policy is not None
                  else self.hi.theta)
         offload = np.asarray(s_conf) < theta
         decision = router_mod.route(jnp.asarray(offload), jnp.asarray(s_conf),
                                     cap)
         complex_tokens = jnp.asarray(tokens)[decision.indices]
-        l_out, _ = self._l_step(self.l.params, tokens=complex_tokens)
+        l_out, _ = l_step(self.l.params, tokens=complex_tokens)
         l_out.block_until_ready()
-        t2 = time.perf_counter()
-
         merged = router_mod.scatter_merge(s_out, l_out, decision)
-
+        t1 = time.perf_counter()
         if self.online_policy is not None:
-            # L-tier agreement on served requests is the correctness proxy
             served_idx = np.asarray(decision.indices)[np.asarray(decision.valid)]
             if len(served_idx):
                 s_sub = np.asarray(s_out)[served_idx]
@@ -125,12 +295,10 @@ class HIEngine:
                 agree = (s_sub == l_sub).all(axis=-1)
                 self.online_policy.update(np.asarray(s_conf)[served_idx],
                                           agree)
-
         self.stats["requests"] += b
         self.stats["offloaded"] += int(offload.sum())
         self.stats["dropped"] += int(decision.dropped)
-        self.stats["s_time"] += t1 - t0
-        self.stats["l_time"] += t2 - t1
+        self.stats["serve_time"] += t1 - t0
         return {
             "tokens": np.asarray(merged),
             "s_tokens": np.asarray(s_out),
@@ -149,7 +317,8 @@ class HIEngine:
 
 
 def build_engine(cfg: ModelConfig, hi: HIConfig, rng=None, dtype=jnp.float32,
-                 cache_len: int = 128, max_new_tokens: int = 8) -> HIEngine:
+                 cache_len: int = 128, max_new_tokens: int = 8,
+                 use_kernel: bool = False) -> HIEngine:
     """Construct an S/L cascade for one architecture family: L = reduced
     assigned config (CPU-runnable), S = its s_variant."""
     rng = rng if rng is not None else jax.random.PRNGKey(0)
@@ -159,4 +328,5 @@ def build_engine(cfg: ModelConfig, hi: HIConfig, rng=None, dtype=jnp.float32,
     l_params = model_zoo.init_params(k1, l_cfg, dtype)
     s_params = model_zoo.init_params(k2, s_cfg, dtype)
     return HIEngine(TierModel(s_cfg, s_params), TierModel(l_cfg, l_params),
-                    hi, cache_len=cache_len, max_new_tokens=max_new_tokens)
+                    hi, cache_len=cache_len, max_new_tokens=max_new_tokens,
+                    use_kernel=use_kernel)

@@ -65,7 +65,8 @@ def test_dense_prefill_matches_stepwise(key):
     params = zoo.init_params(key, cfg)
     tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
 
-    logits_bulk, cache_bulk = transformer.prefill(params, cfg, tokens, CACHE)
+    logits_bulk, cache_bulk = transformer.prefill(
+        params, cfg, tokens, zoo.init_cache(cfg, B, CACHE, dtype=jnp.float32))
     cache = zoo.init_cache(cfg, B, CACHE, dtype=jnp.float32)
     logits_step = _stepwise_logits(params, cfg, tokens, cache)
     np.testing.assert_allclose(np.asarray(logits_bulk),

@@ -1,0 +1,151 @@
+"""Device-resident serving hot path: batched prefill equivalence per family,
+router merge semantics for dropped escalations, and the engine's single
+post-cascade host-sync guarantee."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import HIConfig
+from repro.configs.registry import ARCHS
+from repro.core import router
+from repro.models import model_zoo as zoo
+from repro.serving import engine as engine_mod
+from repro.serving.engine import build_engine
+
+B, S, CACHE, STEPS = 4, 12, 32, 6
+
+# one reduced config per decoder family (dense incl. local/global SWA, ssm,
+# hybrid, moe)
+FAMS = ["qwen2-1.5b", "gemma3-1b", "mamba2-370m", "zamba2-2.7b",
+        "deepseek-moe-16b"]
+
+
+# ---------------------------------------------------------------------------
+# batched prefill == token-by-token scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", FAMS)
+def test_prefill_generations_match_legacy_scan(arch, key):
+    """Greedy generations from the batched prefill must be identical to the
+    legacy per-token scan prefill — same tokens, same mean confidence rule."""
+    cfg = ARCHS[arch].reduced()
+    params = zoo.init_params(key, cfg)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+
+    old_toks, old_conf = jax.jit(
+        lambda p, t: engine_mod._decode_loop(p, cfg, t, CACHE, STEPS,
+                                             "max_prob"))(params, tokens)
+    new_toks, new_conf, cache = jax.jit(
+        lambda p, t, c: engine_mod._generate(p, cfg, t, c, steps=STEPS,
+                                             metric="max_prob", theta=0.5)
+    )(params, tokens, zoo.init_cache(cfg, B, CACHE))
+
+    np.testing.assert_array_equal(np.asarray(new_toks), np.asarray(old_toks))
+    assert int(cache["pos"]) == S + STEPS
+    # confidences feed the offload rule; tiny numeric drift is acceptable for
+    # the recurrent families (chunked SSD vs per-token recurrence)
+    np.testing.assert_allclose(np.asarray(new_conf), np.asarray(old_conf),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_prefill_cache_continues_decode(key):
+    """The prefill-written cache is a valid decode cache: continuing from it
+    equals continuing from a stepwise-filled one (dense, fp32 cache)."""
+    cfg = ARCHS["qwen2-1.5b"].reduced()
+    params = zoo.init_params(key, cfg)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+
+    logits_bulk, cache_bulk = zoo.prefill(
+        params, cfg, tokens, zoo.init_cache(cfg, B, CACHE, dtype=jnp.float32))
+    cache_step = zoo.init_cache(cfg, B, CACHE, dtype=jnp.float32)
+    logits_step = None
+    for t in range(S):
+        logits_step, cache_step = zoo.decode_step(params, cfg,
+                                                  tokens[:, t:t + 1],
+                                                  cache_step)
+    np.testing.assert_allclose(np.asarray(logits_bulk),
+                               np.asarray(logits_step), rtol=2e-3, atol=2e-3)
+    nxt = jnp.argmax(logits_bulk, -1)[:, None].astype(jnp.int32)
+    l1, _ = zoo.decode_step(params, cfg, nxt, cache_bulk)
+    l2, _ = zoo.decode_step(params, cfg, nxt, cache_step)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# router: dropped escalations keep the S-tier result
+# ---------------------------------------------------------------------------
+
+def test_scatter_merge_preserves_dropped_escalations():
+    """Requests that want offload but exceed capacity (dropped) must be
+    served with the S-tier output, untouched by the merge."""
+    n, cap = 8, 3
+    conf = jnp.asarray(np.linspace(0.1, 0.8, n), jnp.float32)
+    mask = jnp.ones((n,), bool)                 # everyone wants offload
+    d = router.route(mask, conf, cap)
+    s_out = jnp.arange(n * 2, dtype=jnp.int32).reshape(n, 2)
+    l_out = 100 + jnp.arange(cap * 2, dtype=jnp.int32).reshape(cap, 2)
+    merged = np.asarray(router.scatter_merge(s_out, l_out, d))
+    served = np.asarray(d.served_remote)
+    assert served.sum() == cap and int(d.dropped) == n - cap
+    # dropped (and never-offloaded) positions are bit-identical to S-tier
+    np.testing.assert_array_equal(merged[~served], np.asarray(s_out)[~served])
+    # served positions carry L-tier rows
+    assert (merged[served] >= 100).all()
+
+
+def test_router_agreement_on_device():
+    s_out = jnp.asarray([[1, 2], [3, 4], [5, 6], [7, 8]], jnp.int32)
+    conf = jnp.asarray([0.1, 0.9, 0.2, 0.8], jnp.float32)
+    d = router.route(conf < 0.5, conf, 2)       # gathers rows 0 and 2
+    l_out = s_out[d.indices].at[1].add(1)       # slot 1 disagrees
+    agree = np.asarray(router.agreement(s_out, l_out, d))
+    np.testing.assert_array_equal(agree, [True, False])
+
+
+# ---------------------------------------------------------------------------
+# engine: single post-cascade host sync + executable cache
+# ---------------------------------------------------------------------------
+
+def test_engine_single_host_sync_and_no_retrace(monkeypatch):
+    """`serve` must perform NO host transfer between the S-tier and L-tier
+    forwards: the only device→host sync is the one post-cascade
+    ``_host_fetch``.  Re-serving the same (batch, bucket) shape must reuse
+    the compiled executable."""
+    calls = []
+    real = engine_mod._host_fetch
+    monkeypatch.setattr(engine_mod, "_host_fetch",
+                        lambda tree: (calls.append(1), real(tree))[1])
+    cfg = ARCHS["qwen2-1.5b"].reduced()
+    eng = build_engine(cfg, HIConfig(theta=0.6, capacity_factor=0.5),
+                       max_new_tokens=3, cache_len=32)
+    toks = np.random.default_rng(0).integers(0, cfg.vocab_size,
+                                             (4, 8)).astype(np.int32)
+    out = eng.serve(toks)
+    assert len(calls) == 1          # exactly one sync point per serve()
+    assert all(isinstance(v, np.ndarray) for v in out.values())
+    eng.serve(toks)
+    assert len(calls) == 2
+    assert eng.stats["compiles"] == 1           # same shape -> no retrace
+    eng.serve(np.pad(toks, ((0, 0), (0, 8))))   # new bucket -> one compile
+    assert eng.stats["compiles"] == 2
+    eng.serve(toks)                              # back to the first bucket
+    assert eng.stats["compiles"] == 2
+
+
+def test_engine_matches_legacy_serve(key):
+    """End-to-end: the device-resident cascade and the legacy path agree on
+    generations, confidence, and offload accounting."""
+    cfg = ARCHS["qwen2-1.5b"].reduced()
+    hi = HIConfig(theta=0.6, capacity_factor=0.5)
+    toks = np.random.default_rng(5).integers(0, cfg.vocab_size,
+                                             (4, 8)).astype(np.int32)
+    eng_new = build_engine(cfg, hi, max_new_tokens=4, cache_len=32)
+    eng_old = build_engine(cfg, hi, max_new_tokens=4, cache_len=32)
+    new = eng_new.serve(toks)
+    old = eng_old.serve_legacy(toks)
+    np.testing.assert_array_equal(new["tokens"], old["tokens"])
+    np.testing.assert_array_equal(new["offloaded"], old["offloaded"])
+    np.testing.assert_allclose(new["confidence"], old["confidence"],
+                               rtol=1e-5, atol=1e-5)
