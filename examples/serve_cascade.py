@@ -8,6 +8,10 @@ offload/cost accounting plus measured tier latencies.
 
   PYTHONPATH=src python examples/serve_cascade.py --arch qwen2-1.5b \
       --requests 32 --theta 0.55
+
+``--stream`` serves the same request set through the continuous-batching
+scheduler (slot-level admission over the paged KV pool, one compiled shape
+across all buckets) instead of drained batches.
 """
 import argparse
 import time
@@ -52,6 +56,9 @@ def main():
     ap.add_argument("--theta", type=float, default=0.55)
     ap.add_argument("--capacity-factor", type=float, default=0.5)
     ap.add_argument("--max-new-tokens", type=int, default=6)
+    ap.add_argument("--stream", action="store_true",
+                    help="continuous batching (paged KV pool) instead of "
+                         "drained batches")
     args = ap.parse_args()
 
     cfg = ARCHS[args.arch].reduced()
@@ -62,20 +69,32 @@ def main():
                           cache_len=64)
 
     rng = np.random.default_rng(0)
-    batcher = Batcher(batch_size=args.batch, buckets=(16, 32))
-    for i in range(args.requests):
-        batcher.submit(Request(i, rng.integers(
-            0, cfg.vocab_size, int(rng.integers(4, 16))).astype(np.int32),
-            max_new_tokens=args.max_new_tokens))
+    requests = [Request(i, rng.integers(
+        0, cfg.vocab_size, int(rng.integers(4, 16))).astype(np.int32),
+        max_new_tokens=args.max_new_tokens) for i in range(args.requests)]
 
     t0 = time.time()
-    batches = 0
-    while batcher.queue:
-        b = batcher.next_batch()
-        out = engine.serve(b.tokens)
-        batches += 1
-        print(f"batch {batches}: conf={np.round(out['confidence'], 2)} "
-              f"offloaded={int(out['offloaded'].sum())}/{len(b.tokens)}")
+    if args.stream:
+        results = engine.serve_stream(requests, buckets=(16, 32),
+                                      num_slots=args.batch, page_size=16)
+        confs = np.asarray([results[r.request_id]["confidence"]
+                            for r in requests])
+        n_off = sum(results[r.request_id]["offloaded"] for r in requests)
+        print(f"stream: conf={np.round(confs, 2)} "
+              f"offloaded={n_off}/{len(requests)} "
+              f"({int(engine.stats['stream_ticks'])} ticks, "
+              f"{int(engine.stats['stream_compiles'])} compiled shape)")
+    else:
+        batcher = Batcher(batch_size=args.batch, buckets=(16, 32))
+        for r in requests:
+            batcher.submit(r)
+        batches = 0
+        while batcher.queue:
+            b = batcher.next_batch()
+            out = engine.serve(b.tokens)
+            batches += 1
+            print(f"batch {batches}: conf={np.round(out['confidence'], 2)} "
+                  f"offloaded={int(out['offloaded'].sum())}/{len(b.tokens)}")
     dt = time.time() - t0
 
     s = engine.summary()

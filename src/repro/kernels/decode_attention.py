@@ -27,24 +27,21 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 _NEG = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, mask_ref, acc_ref, m_ref, l_ref, *,
-            scale: float):
-    sb = pl.program_id(2)
+def _flash_update(q, k, v, valid, acc_ref, m_ref, l_ref, *, scale: float,
+                  init: jnp.ndarray) -> None:
+    """One online-softmax accumulation step shared by the contiguous and the
+    paged kernel.  q: (G, D); k/v: (bs, D); valid: (bs,) bool."""
 
-    @pl.when(sb == 0)
+    @pl.when(init)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
         m_ref[...] = jnp.full_like(m_ref, _NEG)
         l_ref[...] = jnp.zeros_like(l_ref)
-
-    q = q_ref[0, 0].astype(jnp.float32)              # (G, D)
-    k = k_ref[0, :, 0].astype(jnp.float32)           # (bs, D)
-    v = v_ref[0, :, 0].astype(jnp.float32)           # (bs, D)
-    valid = mask_ref[0] > 0                          # (bs,)
 
     scores = (q @ k.T) * scale                        # (G, bs)
     scores = jnp.where(valid[None, :], scores, _NEG)
@@ -60,6 +57,16 @@ def _kernel(q_ref, k_ref, v_ref, mask_ref, acc_ref, m_ref, l_ref, *,
     m_ref[0, 0] = m_new
     l_ref[0, 0] = l_prev * corr + jnp.sum(p, axis=-1)
     acc_ref[0, 0] = acc_prev * corr[:, None] + p @ v
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref, acc_ref, m_ref, l_ref, *,
+            scale: float):
+    _flash_update(q_ref[0, 0].astype(jnp.float32),
+                  k_ref[0, :, 0].astype(jnp.float32),
+                  v_ref[0, :, 0].astype(jnp.float32),
+                  mask_ref[0] > 0,
+                  acc_ref, m_ref, l_ref, scale=scale,
+                  init=pl.program_id(2) == 0)
 
 
 def decode_attention_pallas(q: jnp.ndarray, cache_k: jnp.ndarray,
@@ -101,6 +108,79 @@ def decode_attention_pallas(q: jnp.ndarray, cache_k: jnp.ndarray,
         ],
         interpret=interpret,
     )(qg, cache_k, cache_v, mask)
+
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# paged variant: gather K/V through an int32 block table
+# ---------------------------------------------------------------------------
+#
+# Continuous batching stores the KV cache as ONE physical page pool shared by
+# every slot; each slot's logical pages map to physical ones via a block
+# table.  The kernel never materialises the gathered (B, S, K, D) cache: the
+# block table is a SCALAR-PREFETCH operand (available before the body runs on
+# TPU), so the K/V BlockSpec index_maps dereference it directly — grid step
+# (b, kv, j) DMAs physical page ``block[b, j]`` into VMEM.  Everything else
+# (online softmax, output revisiting over the sequential last grid dim) is the
+# contiguous kernel's discipline, shared via ``_flash_update``.
+
+
+def _paged_kernel(blk_ref, q_ref, k_ref, v_ref, mask_ref,
+                  acc_ref, m_ref, l_ref, *, scale: float):
+    del blk_ref      # consumed by the index_maps, not the body
+    _flash_update(q_ref[0, 0].astype(jnp.float32),
+                  k_ref[0, :, 0].astype(jnp.float32),
+                  v_ref[0, :, 0].astype(jnp.float32),
+                  mask_ref[0, 0] > 0,
+                  acc_ref, m_ref, l_ref, scale=scale,
+                  init=pl.program_id(2) == 0)
+
+
+def decode_attention_paged_pallas(q: jnp.ndarray, pool_k: jnp.ndarray,
+                                  pool_v: jnp.ndarray, block: jnp.ndarray,
+                                  valid: jnp.ndarray, *,
+                                  interpret: bool = True) -> jnp.ndarray:
+    """q: (B, 1, H, D); pool_k/v: (P, page, K, D); block: (B, n_pages) int32;
+    valid: (B, n_pages * page) bool (per-slot positional mask).
+
+    Returns (B, 1, H, D) attention output (fp32 accumulation)."""
+    b, _, h, d = q.shape
+    page, kh = pool_k.shape[1], pool_k.shape[2]
+    npg = block.shape[1]
+    g = h // kh
+    qg = q.reshape(b, kh, g, d)
+    mask = valid.astype(jnp.int32).reshape(b, npg, page)
+
+    kernel = functools.partial(_paged_kernel, scale=1.0 / math.sqrt(d))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kh, npg),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, ki, si, blk: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda bi, ki, si, blk: (blk[bi, si], 0, ki, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda bi, ki, si, blk: (blk[bi, si], 0, ki, 0)),
+            pl.BlockSpec((1, 1, page), lambda bi, ki, si, blk: (bi, si, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, ki, si, blk: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, 1, g), lambda bi, ki, si, blk: (bi, ki, 0)),
+            pl.BlockSpec((1, 1, g), lambda bi, ki, si, blk: (bi, ki, 0)),
+        ],
+    )
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kh, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, kh, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, kh, g), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block, qg, pool_k, pool_v, mask)
 
     out = acc / jnp.maximum(l, 1e-30)[..., None]
     return out.reshape(b, 1, h, d).astype(q.dtype)

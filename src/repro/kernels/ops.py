@@ -41,6 +41,19 @@ def decode_attention(q: jnp.ndarray, cache_k: jnp.ndarray,
                                        block_s=block_s, interpret=INTERPRET)
 
 
+@jax.jit
+def decode_attention_paged(q: jnp.ndarray, pool_k: jnp.ndarray,
+                           pool_v: jnp.ndarray, block: jnp.ndarray,
+                           valid: jnp.ndarray) -> jnp.ndarray:
+    """Flash decode attention over a PAGED KV pool.
+
+    q: (B,1,H,D); pool_k/v: (P, page, K, D); block: (B, n_pages) int32 block
+    table (scalar-prefetched — the kernel DMAs physical pages directly);
+    valid: (B, n_pages * page) per-slot positional mask."""
+    return _da.decode_attention_paged_pallas(q, pool_k, pool_v, block, valid,
+                                             interpret=INTERPRET)
+
+
 @functools.partial(jax.jit, static_argnames=("chunk",))
 def ssd(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
         C: jnp.ndarray, chunk: int = 128) -> Tuple[jnp.ndarray, jnp.ndarray]:

@@ -144,33 +144,51 @@ def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
     return logits, {"state": ns, "conv": ncw, "k": nk, "v": nv, "pos": pos + 1}
 
 
-def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
-            cache: Params, *, use_kernel: bool = False
-            ) -> Tuple[jnp.ndarray, Params]:
-    """Consume the whole (B, S) prompt in one batched pass, writing the SSM
-    states, conv windows, and the per-group shared-attention KV slots.
-    ``cache`` supplies the buffers and is overwritten (donation-safe).
+# ---------------------------------------------------------------------------
+# paged cache API (continuous batching)
+# ---------------------------------------------------------------------------
+#
+# Mamba states are per-slot (constant-size, nothing to page); the shared
+# attention block's KV is a paged pool with a per-GROUP leading axis,
+# (G, P, page, K, Dh), indexed by the scheduler's single block table (one
+# physical page holds one group's K/V for a page worth of positions).
 
-    Returns (last-token logits (B, V) fp32, filled cache).
-    """
-    h = params["embed"][tokens]
-    b, s, _ = h.shape
+
+def init_paged_cache(cfg: ModelConfig, num_slots: int, num_pages: int,
+                     page_size: int, dtype=jnp.bfloat16):
+    g, k = _num_groups(cfg), cfg.shared_attn_every
+    h, p, n = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.ssm_d_inner + 2 * n
+    kv_shape = (g, num_pages, page_size, cfg.num_kv_heads,
+                cfg.resolved_head_dim)
+    return {
+        "state": jnp.zeros((g, k, num_slots, h, p, n), jnp.float32),
+        "conv": jnp.zeros((g, k, num_slots, cfg.ssm_conv_width - 1, conv_dim),
+                          dtype),
+        "kp": jnp.zeros(kv_shape, dtype), "vp": jnp.zeros(kv_shape, dtype),
+    }
+
+
+def _prefill_outer(params: Params, cfg: ModelConfig, s: int, b: int,
+                   kv_dtype, conv_dtype, use_kernel: bool, length, store_kv):
+    """The per-group prefill scan body shared by :func:`prefill` (contiguous
+    cache) and :func:`prefill_paged` (page pool).  ``store_kv(kv, k, v)``
+    writes the group's shared-attention K/V into whichever layout the caller
+    scans through; everything else is identical between the two paths."""
     sp = params["shared_attn"]
     hd = cfg.resolved_head_dim
-    conv_dtype = cache["conv"].dtype
-    kv_dtype = cache["k"].dtype
     pos = jnp.arange(s)
 
     def inner(carry, lp):
         x = carry
         y, st, cw = mamba2.mamba_block_prefill(
             lp, cfg, L.rmsnorm(lp["ln"], x, cfg.norm_eps),
-            use_kernel=use_kernel, conv_dtype=conv_dtype)
+            use_kernel=use_kernel, conv_dtype=conv_dtype, length=length)
         return x + y, (st, cw)
 
     def outer(carry, xs):
         x = carry
-        gp, ck, cv = xs
+        gp, kv = xs
         x, (st_g, cw_g) = lax.scan(inner, x, gp)
         xn = L.rmsnorm(sp["ln1"], x, cfg.norm_eps)
         q, k, v = L._qkv(sp["attn"], xn, cfg.num_heads, cfg.num_kv_heads, hd)
@@ -182,12 +200,100 @@ def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
         a = L._sdpa(q, k, v, L.causal_window_mask(s, s))
         x = x + a.reshape(b, s, cfg.num_heads * hd) @ sp["attn"]["wo"]
         x = x + L.swiglu(sp["mlp"], L.rmsnorm(sp["ln2"], x, cfg.norm_eps))
-        ck = lax.dynamic_update_slice(ck, k, (0, 0, 0, 0))
-        cv = lax.dynamic_update_slice(cv, v, (0, 0, 0, 0))
-        return act.shard_hidden(x), (st_g, cw_g, ck, cv)
+        return act.shard_hidden(x), (st_g, cw_g, store_kv(kv, k, v))
+
+    return outer
+
+
+def prefill_paged(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                  lengths: jnp.ndarray, slots: jnp.ndarray,
+                  block_rows: jnp.ndarray, cache: Params, *,
+                  use_kernel: bool = False) -> Tuple[jnp.ndarray, Params]:
+    """Prefill a batch of admitted requests: per-group SSM states/conv
+    windows land in slots ``slots``; shared-attention K/V lands in each
+    slot's pages.  The group math is EXACTLY :func:`prefill`'s (shared
+    ``_prefill_outer``); only the K/V store differs."""
+    h = params["embed"][tokens]
+    b, s, _ = h.shape
+
+    def store_kv(kv, k, v):
+        pk, pv = kv
+        return (L.scatter_prefill_pages(pk, k, block_rows),
+                L.scatter_prefill_pages(pv, v, block_rows))
+
+    outer = _prefill_outer(params, cfg, s, b, cache["kp"].dtype,
+                           cache["conv"].dtype, use_kernel, lengths, store_kv)
+    h, (ns, ncw, (nk, nv)) = lax.scan(
+        outer, act.shard_hidden(h), (params["layers"],
+                                     (cache["kp"], cache["vp"])))
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    h = jnp.take_along_axis(h, (lengths - 1)[:, None, None], axis=1)
+    logits = (h[:, 0, :] @ params["lm_head"]).astype(jnp.float32)
+    new_cache = {
+        "state": cache["state"].at[:, :, slots].set(ns, mode="drop"),
+        "conv": cache["conv"].at[:, :, slots].set(ncw, mode="drop"),
+        "kp": nk, "vp": nv,
+    }
+    return logits, new_cache
+
+
+def decode_step_paged(params: Params, cfg: ModelConfig, token: jnp.ndarray,
+                      pos: jnp.ndarray, block: jnp.ndarray, cache: Params, *,
+                      use_kernel: bool = False) -> Tuple[jnp.ndarray, Params]:
+    """One decode step for all slots at per-slot positions."""
+    h = params["embed"][token]
+    sp = params["shared_attn"]
+
+    def inner(carry, xs):
+        x = carry
+        lp, st, cw = xs
+        y, st, cw = mamba2.mamba_block_step(
+            lp, cfg, L.rmsnorm(lp["ln"], x, cfg.norm_eps), st, cw)
+        return x + y, (st, cw)
+
+    def outer(carry, xs):
+        x = carry
+        gp, st_g, cw_g, pk, pv = xs
+        x, (st_g, cw_g) = lax.scan(inner, x, (gp, st_g, cw_g))
+        a, pk, pv = L.attention_decode_paged(
+            sp["attn"], L.rmsnorm(sp["ln1"], x, cfg.norm_eps), pk, pv,
+            block, pos, num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+            use_kernel=use_kernel)
+        x = x + a
+        x = x + L.swiglu(sp["mlp"], L.rmsnorm(sp["ln2"], x, cfg.norm_eps))
+        return x, (st_g, cw_g, pk, pv)
 
     h, (ns, ncw, nk, nv) = lax.scan(
-        outer, act.shard_hidden(h), (params["layers"], cache["k"], cache["v"]))
+        outer, h, (params["layers"], cache["state"], cache["conv"],
+                   cache["kp"], cache["vp"]))
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = (h[:, 0, :] @ params["lm_head"]).astype(jnp.float32)
+    return logits, {"state": ns, "conv": ncw, "kp": nk, "vp": nv}
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            cache: Params, *, use_kernel: bool = False
+            ) -> Tuple[jnp.ndarray, Params]:
+    """Consume the whole (B, S) prompt in one batched pass, writing the SSM
+    states, conv windows, and the per-group shared-attention KV slots.
+    ``cache`` supplies the buffers and is overwritten (donation-safe).
+
+    Returns (last-token logits (B, V) fp32, filled cache).
+    """
+    h = params["embed"][tokens]
+    b, s, _ = h.shape
+
+    def store_kv(kv, k, v):
+        ck, cv = kv
+        return (lax.dynamic_update_slice(ck, k, (0, 0, 0, 0)),
+                lax.dynamic_update_slice(cv, v, (0, 0, 0, 0)))
+
+    outer = _prefill_outer(params, cfg, s, b, cache["k"].dtype,
+                           cache["conv"].dtype, use_kernel, None, store_kv)
+    h, (ns, ncw, (nk, nv)) = lax.scan(
+        outer, act.shard_hidden(h), (params["layers"],
+                                     (cache["k"], cache["v"])))
     h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
     logits = (h[:, -1, :] @ params["lm_head"]).astype(jnp.float32)
     return logits, {"state": ns, "conv": ncw, "k": nk, "v": nv,

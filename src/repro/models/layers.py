@@ -299,6 +299,74 @@ def attention_decode(params: Params, x: jnp.ndarray, cache_k: jnp.ndarray,
     return out, cache_k, cache_v
 
 
+def attention_decode_paged(params: Params, x: jnp.ndarray, pool_k: jnp.ndarray,
+                           pool_v: jnp.ndarray, block: jnp.ndarray,
+                           pos: jnp.ndarray, *, num_heads: int, num_kv: int,
+                           head_dim: int, rope_theta: float,
+                           window: Optional[jnp.ndarray] = None,
+                           use_kernel: bool = False
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode against a PAGED KV pool (one layer's slice of it).
+
+    x: (B, 1, D); pool_k/v: (P, page, K, Dh) — ONE physical allocation shared
+    by every slot; block: (B, n_pages) int32 block table mapping each slot's
+    logical pages to physical ones (0 = the null/trash page); pos: (B,) int32
+    per-slot positions (continuous batching: slots decode at DIFFERENT
+    positions, unlike the contiguous cache's single scalar).
+
+    The new token's K/V is scattered into page ``block[b, pos_b // page]`` at
+    offset ``pos_b % page``; reads gather every slot's pages back through the
+    table (or stream them inside the Pallas kernel when ``use_kernel``).
+    Masking is positional (``kpos <= pos_b``) so stale page contents are never
+    observable.  Returns (out (B,1,D), pool_k, pool_v).
+    """
+    b = x.shape[0]
+    page = pool_k.shape[1]
+    n_pages = block.shape[1]
+    s_tot = n_pages * page
+    q, k, v = _qkv(params, x, num_heads, num_kv, head_dim)
+    if rope_theta > 0:
+        pq = pos[:, None]                    # (B, 1) absolute positions
+        q = apply_rope(q, pq, rope_theta)
+        k = apply_rope(k, pq, rope_theta)
+    rows = jnp.arange(b)
+    pg = block[rows, pos // page]            # (B,) physical page of this token
+    off = pos % page
+    # duplicate (page 0) targets from idle slots race benignly: the null page
+    # is never covered by any slot's positional mask
+    pool_k = pool_k.at[pg, off].set(k[:, 0].astype(pool_k.dtype), mode="drop")
+    pool_v = pool_v.at[pg, off].set(v[:, 0].astype(pool_v.dtype), mode="drop")
+    kpos = jnp.arange(s_tot)[None, :]        # logical key positions per slot
+    valid = kpos <= pos[:, None]
+    if window is not None:
+        valid = valid & (pos[:, None] - kpos < window)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        out = kops.decode_attention_paged(q, pool_k, pool_v, block, valid)
+    else:
+        kk = pool_k[block].reshape(b, s_tot, num_kv, head_dim)
+        vv = pool_v[block].reshape(b, s_tot, num_kv, head_dim)
+        out = _sdpa(q, kk, vv, valid[:, None, :])
+    out = out.reshape(b, 1, num_heads * head_dim) @ params["wo"]
+    return out, pool_k, pool_v
+
+
+def scatter_prefill_pages(pool: jnp.ndarray, seq_kv: jnp.ndarray,
+                          block_rows: jnp.ndarray) -> jnp.ndarray:
+    """Write a batch of sequences' prefill K (or V) into their pages.
+
+    pool: (P, page, K, Dh); seq_kv: (A, S, K, Dh) with S % page == 0;
+    block_rows: (A, n_pages) — only the first S // page entries of each row
+    are written.  Rows belonging to masked/padded admissions point at the
+    null page 0; their (raced, garbage) writes land there harmlessly.
+    """
+    page = pool.shape[1]
+    a, s = seq_kv.shape[:2]
+    paged = seq_kv.reshape(a, s // page, page, *seq_kv.shape[2:])
+    return pool.at[block_rows[:, : s // page]].set(paged.astype(pool.dtype),
+                                                   mode="drop")
+
+
 # ---------------------------------------------------------------------------
 # MLP
 # ---------------------------------------------------------------------------

@@ -191,7 +191,8 @@ def mamba_block(lp: Params, cfg: ModelConfig, x: jnp.ndarray,
 
 
 def mamba_block_prefill(lp: Params, cfg: ModelConfig, x: jnp.ndarray, *,
-                        use_kernel: bool = False, conv_dtype=jnp.bfloat16
+                        use_kernel: bool = False, conv_dtype=jnp.bfloat16,
+                        length: Optional[jnp.ndarray] = None
                         ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Full-sequence mamba2 block that also emits the decode-cache entries.
 
@@ -199,18 +200,38 @@ def mamba_block_prefill(lp: Params, cfg: ModelConfig, x: jnp.ndarray, *,
     (B, W-1, conv_dim)).  The conv window holds the last W-1 *raw*
     (pre-activation) conv inputs, zero-padded on the left for short prompts —
     exactly the state :func:`causal_conv_step` would have accumulated.
+
+    ``length`` (traced, scalar or (B,), paged serving): each prompt is
+    right-padded to a fixed max bucket; positions >= its length get dt = 0,
+    which makes them exact no-ops on the recurrent state (decay 1, zero
+    input — the same trick the chunk padding uses), and the conv window is
+    gathered to END at the row's length instead of the padded tail.  The
+    returned y rows are only valid below their lengths.
     """
     b, l, _ = x.shape
     di, n, h, p = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_head_dim
     W = cfg.ssm_conv_width
     zxbcdt = x @ lp["in_proj"]
     z, xbc, dt = _split_proj(cfg, zxbcdt)
-    win = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))[:, l:, :].astype(conv_dtype)
+    if length is None:
+        win = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))[:, l:, :].astype(conv_dtype)
+    else:
+        lens = jnp.broadcast_to(jnp.asarray(length), (b,))
+        idx = lens[:, None] - (W - 1) + jnp.arange(W - 1)[None, :]  # (B, W-1)
+        live = (idx >= 0)[:, :, None]
+        win = (jnp.take_along_axis(xbc, jnp.clip(idx, 0, l - 1)[:, :, None],
+                                   axis=1) * live).astype(conv_dtype)
     xbc = jax.nn.silu(causal_conv(xbc, lp["conv_w"], lp["conv_b"]))
     xs = xbc[..., :di].reshape(b, l, h, p)
     B = xbc[..., di:di + n]
     C = xbc[..., di + n:]
     dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+    if length is not None:
+        # dt = 0 AFTER softplus: pad steps decay by exp(0) = 1 and inject
+        # dt * x = 0, so the state at the end equals the state at the row's
+        # length
+        dt = jnp.where(jnp.arange(l)[None, :, None] < lens[:, None, None],
+                       dt, 0.0)
     A = -jnp.exp(lp["A_log"])
     if use_kernel:
         from repro.kernels import ops as kops
@@ -312,6 +333,86 @@ def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
     h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
     logits = (h[:, 0, :] @ params["lm_head"]).astype(jnp.float32)
     return logits, {"state": ns, "conv": ncw, "pos": cache["pos"] + 1}
+
+
+# ---------------------------------------------------------------------------
+# paged cache API (continuous batching)
+# ---------------------------------------------------------------------------
+#
+# The SSM decode state is CONSTANT-size per sequence (that is its whole point)
+# so there is nothing to page: the "pool" is per-slot state + conv window, and
+# the scheduler's block table is simply ignored by this family.  Admission
+# overwrites the slot's state wholesale, which is also what makes slot reuse
+# leak-free without an allocator.
+
+
+def init_paged_cache(cfg: ModelConfig, num_slots: int, num_pages: int,
+                     page_size: int, dtype=jnp.bfloat16):
+    del num_pages, page_size
+    h, p, n = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.ssm_d_inner + 2 * n
+    return {
+        "state": jnp.zeros((cfg.num_layers, num_slots, h, p, n), jnp.float32),
+        "conv": jnp.zeros((cfg.num_layers, num_slots, cfg.ssm_conv_width - 1,
+                           conv_dim), dtype),
+    }
+
+
+def prefill_paged(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                  lengths: jnp.ndarray, slots: jnp.ndarray,
+                  block_rows: jnp.ndarray, cache: Params, *,
+                  use_kernel: bool = False) -> Tuple[jnp.ndarray, Params]:
+    """Prefill a batch of admitted requests into decode slots ``slots``.
+
+    tokens: (A, S_max) right-padded; each row's positions >= lengths[i] are
+    exact state no-ops (dt = 0) and its logits are read at lengths[i] - 1.
+    Padded admission rows carry an out-of-range slot index and their state
+    writes are dropped."""
+    del block_rows
+    conv_dtype = cache["conv"].dtype
+    h = params["embed"][tokens]
+
+    def body(carry, lp):
+        x = act.shard_hidden(carry)
+        y, st, cw = mamba_block_prefill(lp, cfg,
+                                        L.rmsnorm(lp["ln"], x, cfg.norm_eps),
+                                        use_kernel=use_kernel,
+                                        conv_dtype=conv_dtype, length=lengths)
+        return act.shard_hidden(x + y), (st, cw)
+
+    h, (ns, ncw) = lax.scan(body, h, params["layers"])
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    h = jnp.take_along_axis(h, (lengths - 1)[:, None, None], axis=1)
+    logits = (h[:, 0, :] @ params["lm_head"]).astype(jnp.float32)
+    new_cache = {
+        "state": cache["state"].at[:, slots].set(ns, mode="drop"),
+        "conv": cache["conv"].at[:, slots].set(ncw, mode="drop"),
+    }
+    return logits, new_cache
+
+
+def decode_step_paged(params: Params, cfg: ModelConfig, token: jnp.ndarray,
+                      pos: jnp.ndarray, block: jnp.ndarray, cache: Params, *,
+                      use_kernel: bool = False) -> Tuple[jnp.ndarray, Params]:
+    """One decode step for all slots.  The recurrent update is position-free,
+    so ``pos``/``block`` are unused — idle slots advance garbage state that
+    admission overwrites."""
+    del pos, block, use_kernel
+    h = params["embed"][token]
+
+    def body(carry, xs):
+        x = carry
+        lp, st, cw = xs
+        y, st, cw = mamba_block_step(lp, cfg,
+                                     L.rmsnorm(lp["ln"], x, cfg.norm_eps),
+                                     st, cw)
+        return x + y, (st, cw)
+
+    h, (ns, ncw) = lax.scan(body, h, (params["layers"], cache["state"],
+                                      cache["conv"]))
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = (h[:, 0, :] @ params["lm_head"]).astype(jnp.float32)
+    return logits, {"state": ns, "conv": ncw}
 
 
 def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,

@@ -131,6 +131,84 @@ def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray, cache, *,
     raise ValueError(f"prefill not supported for family {cfg.family!r}")
 
 
+# ---------------------------------------------------------------------------
+# paged cache API (continuous batching over a shared page pool)
+# ---------------------------------------------------------------------------
+#
+# ``init_paged_cache`` allocates ONE device buffer set per tier: attention
+# K/V lives in a (…, num_pages, page_size, K, Dh) physical page pool indexed
+# by the scheduler's int32 block table (physical page 0 is the null page);
+# recurrent SSM state is per-slot (constant-size — nothing to page).
+# ``prefill_paged`` admits ONE right-padded request into a slot at a FIXED
+# (1, S_max) shape (logits read at ``length - 1``), and ``decode_step_paged``
+# steps ALL slots at per-slot positions — together they are shape-independent
+# of the prompt bucket, which is what lets the continuous scheduler serve
+# every bucket from a single compiled executable.
+
+PAGED_FAMILIES = (DENSE, VLM, MOE, SSM, HYBRID)
+
+
+def init_paged_cache(cfg: ModelConfig, num_slots: int, num_pages: int,
+                     page_size: int, dtype=jnp.bfloat16):
+    if cfg.family in (DENSE, VLM):
+        return transformer.init_paged_cache(cfg, num_slots, num_pages,
+                                            page_size, dtype)
+    if cfg.family == MOE:
+        return moe.init_paged_cache(cfg, num_slots, num_pages, page_size,
+                                    dtype)
+    if cfg.family == SSM:
+        return mamba2.init_paged_cache(cfg, num_slots, num_pages, page_size,
+                                       dtype)
+    if cfg.family == HYBRID:
+        return hybrid.init_paged_cache(cfg, num_slots, num_pages, page_size,
+                                       dtype)
+    raise ValueError(f"paged cache not supported for family {cfg.family!r}")
+
+
+def prefill_paged(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                  lengths: jnp.ndarray, slots: jnp.ndarray,
+                  block_rows: jnp.ndarray, cache, *,
+                  use_kernel: bool = False):
+    """Admit a BATCH of requests in one pass: tokens (A, S_max) right-padded
+    with true lengths (A,), into decode slots ``slots`` (A,) whose
+    block-table rows are ``block_rows`` (A, n_pages).  Padded admission rows
+    use an out-of-range slot + null-page rows, so their writes drop.
+    Returns (per-row last-prompt-position logits (A, V) fp32, cache)."""
+    if cfg.family in (DENSE, VLM):
+        return transformer.prefill_paged(params, cfg, tokens, lengths, slots,
+                                         block_rows, cache)
+    if cfg.family == MOE:
+        return moe.prefill_paged(params, cfg, tokens, lengths, slots,
+                                 block_rows, cache)
+    if cfg.family == SSM:
+        return mamba2.prefill_paged(params, cfg, tokens, lengths, slots,
+                                    block_rows, cache, use_kernel=use_kernel)
+    if cfg.family == HYBRID:
+        return hybrid.prefill_paged(params, cfg, tokens, lengths, slots,
+                                    block_rows, cache, use_kernel=use_kernel)
+    raise ValueError(f"prefill_paged not supported for family {cfg.family!r}")
+
+
+def decode_step_paged(params: Params, cfg: ModelConfig, token: jnp.ndarray,
+                      pos: jnp.ndarray, block: jnp.ndarray, cache, *,
+                      use_kernel: bool = False):
+    """One decode step for ALL slots.  token (B, 1); pos (B,) per-slot
+    positions; block (B, n_pages) block table.  Returns (logits, cache)."""
+    if cfg.family in (DENSE, VLM):
+        return transformer.decode_step_paged(params, cfg, token, pos, block,
+                                             cache, use_kernel=use_kernel)
+    if cfg.family == MOE:
+        return moe.decode_step_paged(params, cfg, token, pos, block, cache,
+                                     use_kernel=use_kernel)
+    if cfg.family == SSM:
+        return mamba2.decode_step_paged(params, cfg, token, pos, block, cache)
+    if cfg.family == HYBRID:
+        return hybrid.decode_step_paged(params, cfg, token, pos, block, cache,
+                                        use_kernel=use_kernel)
+    raise ValueError(
+        f"decode_step_paged not supported for family {cfg.family!r}")
+
+
 def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray, cache, *,
                 use_kernel: bool = False):
     if cfg.family in (DENSE, VLM):

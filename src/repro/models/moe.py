@@ -341,20 +341,12 @@ def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
     return logits, {"k": nk, "v": nv, "pos": pos + 1}
 
 
-def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
-            cache: Params, *, capacity_factor: float = 2.0
-            ) -> Tuple[jnp.ndarray, Params]:
-    """Consume the whole (B, S) prompt in one batched pass and write the KV
-    cache.  ``capacity_factor`` defaults to the decode-path value so routed
-    dispatch behaves like generation, not training.  ``cache`` supplies the
-    buffers and is overwritten (donation-safe).
-
-    Returns (last-token logits (B, V) fp32, filled cache).
-    """
-    h = params["embed"][tokens]
-    b, s, _ = h.shape
+def _prefill_body(cfg: ModelConfig, s: int, b: int, kv_dtype,
+                  capacity_factor: float):
+    """The per-layer prefill scan body shared by :func:`prefill` (contiguous
+    cache) and :func:`prefill_paged` (page pool).  Emits (k, v) per layer for
+    the caller to store."""
     hd = cfg.resolved_head_dim
-    kv_dtype = cache["k"].dtype
     win = jnp.asarray(s, jnp.int32)
     pos = jnp.arange(s)
     mask = L.causal_window_mask(s, s, window=win)
@@ -378,6 +370,92 @@ def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
             y = y + L.swiglu(lp["dense"], xn)
         return act.shard_hidden(x + y), (k, v)
 
+    return body
+
+
+def init_paged_cache(cfg: ModelConfig, num_slots: int, num_pages: int,
+                     page_size: int, dtype=jnp.bfloat16):
+    from repro.models import transformer
+    return transformer.init_paged_cache(cfg, num_slots, num_pages, page_size,
+                                        dtype)
+
+
+def prefill_paged(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                  lengths: jnp.ndarray, slots: jnp.ndarray,
+                  block_rows: jnp.ndarray, cache: Params, *,
+                  capacity_factor: float = 2.0) -> Tuple[jnp.ndarray, Params]:
+    """Paged batched admission prefill (see transformer.prefill_paged).
+
+    Routed dispatch runs over all padded (A, S_max) token rows together; the
+    padded tails do consume expert capacity, so keep ``capacity_factor``
+    generous (the decode-path default) — drops on the tails cannot corrupt
+    real positions, but drops caused BY the tails could.
+    """
+    del slots
+    h = params["embed"][tokens]
+    b, s, _ = h.shape
+    body = _prefill_body(cfg, s, b, cache["kp"].dtype, capacity_factor)
+    h, (ks, vs) = lax.scan(body, h, params["layers"])
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    h = jnp.take_along_axis(h, (lengths - 1)[:, None, None], axis=1)
+    logits = (h[:, 0, :] @ params["lm_head"]).astype(jnp.float32)
+    page = cache["kp"].shape[2]
+    npg = s // page
+    shape = ks.shape[:1] + (b, npg, page) + ks.shape[3:]
+    new_k = cache["kp"].at[:, block_rows[:, :npg]].set(
+        ks.reshape(shape), mode="drop")
+    new_v = cache["vp"].at[:, block_rows[:, :npg]].set(
+        vs.reshape(shape), mode="drop")
+    return logits, {"kp": new_k, "vp": new_v}
+
+
+def decode_step_paged(params: Params, cfg: ModelConfig, token: jnp.ndarray,
+                      pos: jnp.ndarray, block: jnp.ndarray, cache: Params, *,
+                      capacity_factor: float = 2.0, use_kernel: bool = False
+                      ) -> Tuple[jnp.ndarray, Params]:
+    """One decode step for all slots at per-slot positions (paged pool)."""
+    h = params["embed"][token]
+    page = cache["kp"].shape[2]
+    s_tot = block.shape[1] * page
+    win = jnp.asarray(s_tot, jnp.int32)
+
+    def body(carry, xs):
+        x = carry
+        lp, pk, pv = xs
+        a, pk, pv = L.attention_decode_paged(
+            lp["attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), pk, pv,
+            block, pos, num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+            window=win, use_kernel=use_kernel)
+        x = x + a
+        xn = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        y, _ = moe_ffn_auto(lp, cfg, xn, capacity_factor)
+        if "shared" in lp:
+            y = y + L.swiglu(lp["shared"], xn)
+        if "dense" in lp:
+            y = y + L.swiglu(lp["dense"], xn)
+        return x + y, (pk, pv)
+
+    h, (nk, nv) = lax.scan(body, h, (params["layers"], cache["kp"],
+                                     cache["vp"]))
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = (h[:, 0, :] @ params["lm_head"]).astype(jnp.float32)
+    return logits, {"kp": nk, "vp": nv}
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            cache: Params, *, capacity_factor: float = 2.0
+            ) -> Tuple[jnp.ndarray, Params]:
+    """Consume the whole (B, S) prompt in one batched pass and write the KV
+    cache.  ``capacity_factor`` defaults to the decode-path value so routed
+    dispatch behaves like generation, not training.  ``cache`` supplies the
+    buffers and is overwritten (donation-safe).
+
+    Returns (last-token logits (B, V) fp32, filled cache).
+    """
+    h = params["embed"][tokens]
+    b, s, _ = h.shape
+    body = _prefill_body(cfg, s, b, cache["k"].dtype, capacity_factor)
     h, (ks, vs) = lax.scan(body, h, params["layers"])
     h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
     logits = (h[:, -1, :] @ params["lm_head"]).astype(jnp.float32)

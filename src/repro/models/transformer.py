@@ -276,24 +276,13 @@ def decode_step_split(params: Params, cfg: ModelConfig, token: jnp.ndarray,
     return logits, new_cache
 
 
-def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
-            cache: Params, *, patch_embeds: Optional[jnp.ndarray] = None
-            ) -> Tuple[jnp.ndarray, Params]:
-    """Fill the KV cache from a (B, S) prompt in ONE batched pass.
-
-    ``cache`` (from :func:`init_cache`) supplies the buffers; its contents are
-    fully overwritten, so callers may donate it across requests.  K/V are
-    rounded to the cache dtype *before* the in-pass attention so logits and
-    cache match the token-by-token :func:`decode_step` path exactly.
-
-    Returns (last-token logits (B, V) fp32, filled cache).
-    """
-    h = params["embed"][tokens]
-    if patch_embeds is not None:
-        h = jnp.concatenate([patch_embeds.astype(h.dtype), h], axis=1)
-    b, s, _ = h.shape
-    windows = layer_windows(cfg, s)
-    kv_dtype = cache["k"].dtype
+def _prefill_body(cfg: ModelConfig, s: int, b: int, kv_dtype):
+    """The per-layer prefill scan body shared by :func:`prefill` (contiguous
+    cache) and :func:`prefill_paged` (page pool): K/V are rounded to the
+    cache dtype *before* the in-pass attention so logits and cache match the
+    token-by-token decode path exactly, and long sequences take the
+    query-chunked attention path.  Emits (k, v) per layer for the caller to
+    store."""
 
     def body(carry, xs):
         lp, win = xs
@@ -318,6 +307,118 @@ def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
         m = L.swiglu(lp["mlp"], L.rmsnorm(lp["ln2"], x, cfg.norm_eps))
         return x + m, (k, v)
 
+    return body
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache (continuous batching)
+# ---------------------------------------------------------------------------
+#
+# One physical page pool per tier — (L, P, page, K, Dh) — shared by every
+# decode slot through an int32 block table (slot, logical page) -> physical
+# page.  Physical page 0 is the null/trash page: idle slots and unallocated
+# logical pages point there, its contents are garbage by design, and no
+# positional mask ever exposes it.  There is NO global ``pos`` scalar — each
+# slot carries its own position (slots decode at different depths).
+
+
+def init_paged_cache(cfg: ModelConfig, num_slots: int, num_pages: int,
+                     page_size: int, dtype=jnp.bfloat16) -> Params:
+    del num_slots                       # attention state lives in pages only
+    shape = (cfg.num_layers, num_pages, page_size, cfg.num_kv_heads,
+             cfg.resolved_head_dim)
+    return {"kp": jnp.zeros(shape, dtype), "vp": jnp.zeros(shape, dtype)}
+
+
+def prefill_paged(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                  lengths: jnp.ndarray, slots: jnp.ndarray,
+                  block_rows: jnp.ndarray, cache: Params
+                  ) -> Tuple[jnp.ndarray, Params]:
+    """Prefill a batch of admitted requests (each padded to the fixed max
+    bucket) into their pages in ONE pass.
+
+    tokens: (A, S_max) right-padded; lengths: (A,) int32 true (bucketed)
+    prompt lengths — each row's logits are taken at ``lengths[i] - 1`` and
+    only keys below ``lengths[i]`` are ever unmasked downstream, so the
+    padded tails compute garbage that is never observed.  block_rows:
+    (A, n_pages) the admitted slots' block-table rows; padded admission rows
+    point at the null page.  The fixed (A, S_max) shape is what keeps the
+    scheduler at ONE compiled executable across every prompt bucket, and the
+    A-way batching is what amortises admission cost like the drain path does.
+
+    The layer math is EXACTLY :func:`prefill`'s (shared ``_prefill_body``);
+    only the cache write (page scatter vs contiguous) and the logits
+    position differ.  Returns (logits (A, V) fp32, cache).
+    """
+    del slots                           # dense state is fully page-resident
+    h = params["embed"][tokens]
+    b, s, _ = h.shape
+    windows = layer_windows(cfg, s)
+    body = _prefill_body(cfg, s, b, cache["kp"].dtype)
+    h, (ks, vs) = lax.scan(body, h, (params["layers"], windows))
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    h = jnp.take_along_axis(h, (lengths - 1)[:, None, None], axis=1)
+    logits = (h[:, 0, :] @ params["lm_head"]).astype(jnp.float32)
+    # ks: (L, A, S, K, Dh) -> every layer's pages in one scatter
+    page = cache["kp"].shape[2]
+    npg = s // page
+    shape = ks.shape[:1] + (b, npg, page) + ks.shape[3:]
+    new_k = cache["kp"].at[:, block_rows[:, :npg]].set(
+        ks.reshape(shape), mode="drop")
+    new_v = cache["vp"].at[:, block_rows[:, :npg]].set(
+        vs.reshape(shape), mode="drop")
+    return logits, {"kp": new_k, "vp": new_v}
+
+
+def decode_step_paged(params: Params, cfg: ModelConfig, token: jnp.ndarray,
+                      pos: jnp.ndarray, block: jnp.ndarray, cache: Params, *,
+                      use_kernel: bool = False) -> Tuple[jnp.ndarray, Params]:
+    """One decode step for ALL slots at per-slot positions.
+
+    token: (B, 1); pos: (B,) int32; block: (B, n_pages) int32.
+    Returns (logits (B, V) fp32, cache)."""
+    h = params["embed"][token]
+    page = cache["kp"].shape[2]
+    s_tot = block.shape[1] * page
+    windows = layer_windows(cfg, s_tot)
+
+    def body(carry, xs):
+        x = carry
+        lp, pk, pv, win = xs
+        a, pk, pv = L.attention_decode_paged(
+            lp["attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), pk, pv,
+            block, pos, num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+            window=win, use_kernel=use_kernel)
+        x = x + a
+        m = L.swiglu(lp["mlp"], L.rmsnorm(lp["ln2"], x, cfg.norm_eps))
+        return x + m, (pk, pv)
+
+    h, (nk, nv) = lax.scan(body, h, (params["layers"], cache["kp"],
+                                     cache["vp"], windows))
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = (h[:, 0, :] @ params["lm_head"]).astype(jnp.float32)
+    return logits, {"kp": nk, "vp": nv}
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            cache: Params, *, patch_embeds: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, Params]:
+    """Fill the KV cache from a (B, S) prompt in ONE batched pass.
+
+    ``cache`` (from :func:`init_cache`) supplies the buffers; its contents are
+    fully overwritten, so callers may donate it across requests.  K/V are
+    rounded to the cache dtype *before* the in-pass attention so logits and
+    cache match the token-by-token :func:`decode_step` path exactly.
+
+    Returns (last-token logits (B, V) fp32, filled cache).
+    """
+    h = params["embed"][tokens]
+    if patch_embeds is not None:
+        h = jnp.concatenate([patch_embeds.astype(h.dtype), h], axis=1)
+    b, s, _ = h.shape
+    windows = layer_windows(cfg, s)
+    body = _prefill_body(cfg, s, b, cache["k"].dtype)
     h, (ks, vs) = lax.scan(body, h, (params["layers"], windows))
     h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
     logits = (h[:, -1, :] @ params["lm_head"]).astype(jnp.float32)

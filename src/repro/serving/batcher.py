@@ -3,6 +3,14 @@
 XLA serving needs static shapes; the batcher rounds prompt lengths up to a
 bucket and pads the batch to the engine's configured size (same discipline as
 the HI router's static capacity).
+
+Two consumers:
+
+* :class:`Batcher` — the DRAIN path: accumulate ``batch_size`` requests, emit
+  one fixed (B, bucket) batch for ``HIEngine.serve``.
+* :class:`AdmissionQueue` — the CONTINUOUS path: requests are bucketized on
+  submit and handed to the scheduler ONE at a time, the moment a decode slot
+  frees up (``HIEngine.serve_stream``).  No draining, no batch boundary.
 """
 from __future__ import annotations
 
@@ -17,6 +25,8 @@ class Request:
     request_id: int
     prompt: np.ndarray                  # (len,) int32
     max_new_tokens: int = 16
+    temperature: float = 0.0            # <= 0 -> greedy
+    eos_id: Optional[int] = None        # early stop (continuous path only)
 
 
 @dataclass
@@ -34,10 +44,15 @@ class Batch:
 
 
 def pad_to_bucket(n: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket >= n.  A prompt longer than every bucket is an ERROR —
+    silently clamping (the old behaviour) let the pack loop truncate the
+    prompt and serve a corrupted request."""
     for b in buckets:
         if n <= b:
             return b
-    return buckets[-1]
+    raise ValueError(
+        f"prompt length {n} exceeds the largest bucket {max(buckets)}; "
+        f"raise the bucket ladder or split the prompt")
 
 
 class Batcher:
@@ -55,6 +70,10 @@ class Batcher:
         self.queue: List[Request] = []
 
     def submit(self, req: Request) -> None:
+        if len(req.prompt) > self.buckets[-1]:
+            raise ValueError(
+                f"request {req.request_id}: prompt length {len(req.prompt)} "
+                f"exceeds the largest bucket {self.buckets[-1]}")
         self.queue.append(req)
 
     def ready(self) -> bool:
@@ -74,9 +93,56 @@ class Batcher:
         lengths = np.zeros((self.batch_size,), np.int32)
         rids = np.full((self.batch_size,), -1, np.int32)
         for i, r in enumerate(take):
-            L = min(len(r.prompt), bucket)
-            tokens[i, :L] = r.prompt[:L]
+            L = len(r.prompt)
+            tokens[i, :L] = r.prompt
             lengths[i] = L
             rids[i] = r.request_id
         return Batch(tokens, lengths, rids,
                      max(r.max_new_tokens for r in take))
+
+
+@dataclass
+class AdmittedRequest:
+    """One request, bucketized and ready for a decode slot."""
+    request: Request
+    tokens: np.ndarray                  # (bucket,) right-padded to its bucket
+    bucket: int                         # padded prompt length (= prefill pos)
+
+
+class AdmissionQueue:
+    """FIFO admission queue for the continuous scheduler.
+
+    Requests are validated + bucketized at ``submit`` (same ``pad_to_bucket``
+    ladder as the drain path, so the two paths see IDENTICAL padded prompts —
+    the token-equivalence guarantee depends on this) and popped one at a time
+    as slots free up.
+    """
+
+    def __init__(self, buckets: Sequence[int] = (32, 64, 128),
+                 pad_id: int = 0):
+        self.buckets = tuple(sorted(buckets))
+        self.pad_id = pad_id
+        self._queue: List[AdmittedRequest] = []
+        self.submitted = 0
+
+    def submit(self, req: Request) -> None:
+        bucket = pad_to_bucket(len(req.prompt), self.buckets)   # raises if too long
+        tokens = np.full((bucket,), self.pad_id, np.int32)
+        tokens[: len(req.prompt)] = req.prompt
+        self._queue.append(AdmittedRequest(req, tokens, bucket))
+        self.submitted += 1
+
+    def pop(self) -> Optional[AdmittedRequest]:
+        return self._queue.pop(0) if self._queue else None
+
+    def push_front(self, adm: AdmittedRequest) -> None:
+        """Put a popped request back at the head (admission retry)."""
+        self._queue.insert(0, adm)
+
+    # deque-compatible aliases: the scheduler treats the S-tier admission
+    # queue and the L-tier escalation deque through one head-pop interface
+    popleft = pop
+    appendleft = push_front
+
+    def __len__(self) -> int:
+        return len(self._queue)

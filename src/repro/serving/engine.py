@@ -24,9 +24,35 @@ sync point).  Per-shape executables are AOT-compiled and cached in
 tiers' cache buffers are donated (``donate_argnums``) so XLA reuses the
 allocations across requests.
 
+Continuous batching (``serve_stream``)
+--------------------------------------
+``serve()`` drains whole batches: a finished sequence idles its row until the
+slowest one in the batch completes, and every (batch, bucket) pair costs one
+executable + one donated cache pair.  ``serve_stream()`` replaces both with
+the ``serving/scheduler.py`` + ``serving/kv_pool.py`` subsystem:
+
+* cache   = ONE donated page-pool allocation per tier
+  (``model_zoo.init_paged_cache``), indexed by an int32 block table — the
+  bucket disappears from every device shape;
+* tick    = ONE dispatch of ONE AOT-compiled program for ALL buckets:
+  batched admission prefill for up to ``admit_width`` queued requests
+  (``lax.cond``, skipped at runtime when nothing is admitted) +
+  ``decode_block`` fused decode steps for every slot of BOTH tiers at
+  per-slot positions (idle tiers skip the decode the same way);
+* sync    = exactly one ``_host_fetch`` per tick (the drain discipline at
+  tick granularity);
+* admission = ``batcher.AdmissionQueue`` feeds a slot the moment a sequence
+  finishes (EOS / per-request max-new-tokens) or escalates S→L.
+
+So the dispatch-count model becomes: ``serve()`` = 1 program per
+(batch, bucket); ``serve_stream()`` = 1 program per TICK, 1 compiled shape
+TOTAL, with greedy outputs token-identical to ``serve()`` on the same
+bucketized traffic (asserted by tests/test_scheduler.py).
+
 ``benchmarks/bench_serving.py`` measures this path against the legacy
 token-by-token loop (kept below as :func:`_decode_loop` + ``serve_legacy``)
-and writes the requests/sec + prefill/decode split to ``BENCH_serving.json``.
+and the drained batch path under mixed-length Poisson traffic, and writes
+requests/sec + the prefill/decode split to ``BENCH_serving.json``.
 
 This module is deliberately generic over family — it only needs the
 model_zoo API — and is exercised end-to-end on CPU with reduced configs by
@@ -95,28 +121,37 @@ def _decode_loop(params, cfg: ModelConfig, tokens: jnp.ndarray,
 
 
 def _generate(params, cfg: ModelConfig, tokens: jnp.ndarray, cache, *,
-              steps: int, metric: str, theta, use_kernel: bool = False):
-    """Batched prefill + greedy decode, fully on device.
+              steps: int, metric: str, theta, use_kernel: bool = False,
+              seeds=None, temperature=0.0):
+    """Batched prefill + decode, fully on device.
 
-    ``cache`` is overwritten by the prefill (callers donate it).  Returns
-    (generated (B, steps), mean confidence (B,), cache).
+    ``cache`` is overwritten by the prefill (callers donate it).  Sampling is
+    greedy when ``temperature`` (a TRACED scalar — changing it never
+    retraces) is <= 0; otherwise categorical with PER-REQUEST keys derived
+    from ``seeds`` (B,) and the in-request token index, so a request's
+    continuation is reproducible across batch compositions and matches the
+    continuous scheduler token for token.  Returns (generated (B, steps),
+    mean confidence (B,), cache).
     """
     logits, cache = model_zoo.prefill(params, cfg, tokens, cache,
                                       use_kernel=use_kernel)
+    if seeds is None:
+        seeds = jnp.zeros((tokens.shape[0],), jnp.int32)
 
-    def gen_body(carry, _):
+    def gen_body(carry, i):
         cache, logits = carry
         if use_kernel:
             from repro.kernels import ops as kops
             conf = kops.hi_gate(logits, theta, metric=metric)[0]
         else:
             conf = _confidence(logits, metric)
-        tok = sampler.greedy(logits)
+        keys = sampler.request_keys(seeds, i)
+        tok = sampler.sample(keys, logits, temperature)
         logits, cache = model_zoo.decode_step(params, cfg, tok[:, None], cache)
         return (cache, logits), (tok, conf)
 
-    (cache, _), (toks, confs) = jax.lax.scan(gen_body, (cache, logits), None,
-                                             length=steps)
+    (cache, _), (toks, confs) = jax.lax.scan(gen_body, (cache, logits),
+                                             jnp.arange(steps))
     return toks.T, confs.mean(axis=0), cache
 
 
@@ -129,16 +164,19 @@ def _make_cascade(s_cfg: ModelConfig, l_cfg: ModelConfig, hi: HIConfig,
     caller pulls the result dict once, asynchronously, at the end.
     """
 
-    def cascade(s_params, l_params, tokens, theta, s_cache, l_cache):
+    def cascade(s_params, l_params, tokens, theta, temperature, seeds,
+                s_cache, l_cache):
         s_toks, s_conf, s_cache = _generate(
             s_params, s_cfg, tokens, s_cache, steps=steps, metric=hi.metric,
-            theta=theta, use_kernel=use_kernel)
+            theta=theta, use_kernel=use_kernel, seeds=seeds,
+            temperature=temperature)
         offload = s_conf < theta
         decision = router_mod.route(offload, s_conf, capacity)
         complex_tokens = router_mod.gather(tokens, decision)
         l_toks, _, l_cache = _generate(
             l_params, l_cfg, complex_tokens, l_cache, steps=steps,
-            metric=hi.metric, theta=theta, use_kernel=use_kernel)
+            metric=hi.metric, theta=theta, use_kernel=use_kernel,
+            seeds=seeds[decision.indices], temperature=temperature)
         merged = router_mod.scatter_merge(s_toks, l_toks, decision)
         agree = router_mod.agreement(s_toks, l_toks, decision)
         out = {
@@ -170,7 +208,8 @@ class HIEngine:
 
     def __init__(self, s_tier: TierModel, l_tier: TierModel, hi: HIConfig,
                  cache_len: int = 128, max_new_tokens: int = 8,
-                 online_policy=None, use_kernel: bool = False):
+                 online_policy=None, use_kernel: bool = False,
+                 temperature: float = 0.0):
         self.s = s_tier
         self.l = l_tier
         self.hi = hi
@@ -178,12 +217,15 @@ class HIEngine:
         self.cache_len = cache_len
         self.max_new_tokens = max_new_tokens
         self.use_kernel = use_kernel
+        self.temperature = temperature
         # (batch, bucket) -> [compiled executable, s_cache, l_cache]
         self._exec: Dict[Tuple[int, int], list] = {}
         self._legacy = None
+        self._stream = None          # (key, ContinuousScheduler) lazy cache
         self.stats: Dict[str, float] = {
             "requests": 0, "offloaded": 0, "dropped": 0,
-            "serve_time": 0.0, "compiles": 0}
+            "serve_time": 0.0, "compiles": 0, "stream_compiles": 0,
+            "stream_ticks": 0}
 
     # -- executable cache ---------------------------------------------------
 
@@ -201,7 +243,7 @@ class HIEngine:
         cap = router_mod.capacity_for(b, self.hi.capacity_factor)
         fn = jax.jit(_make_cascade(self.s.cfg, self.l.cfg, self.hi,
                                    self.max_new_tokens, cap, self.use_kernel),
-                     donate_argnums=(4, 5))
+                     donate_argnums=(6, 7))
         s_cache = model_zoo.init_cache(self.s.cfg, b, self.cache_len)
         l_cache = model_zoo.init_cache(self.l.cfg, cap, self.cache_len)
         spec = partial(jax.tree.map,
@@ -213,6 +255,8 @@ class HIEngine:
                 spec(self.s.params), spec(self.l.params),
                 jax.ShapeDtypeStruct((b, s), jnp.int32),
                 jax.ShapeDtypeStruct((), jnp.float32),
+                jax.ShapeDtypeStruct((), jnp.float32),
+                jax.ShapeDtypeStruct((b,), jnp.int32),
                 spec(s_cache), spec(l_cache)).compile()
         self.stats["compiles"] += 1
         ent = [compiled, s_cache, l_cache]
@@ -221,23 +265,31 @@ class HIEngine:
 
     # -- serving ------------------------------------------------------------
 
-    def serve(self, tokens: np.ndarray) -> Dict[str, np.ndarray]:
+    def serve(self, tokens: np.ndarray,
+              seeds: np.ndarray = None) -> Dict[str, np.ndarray]:
         """tokens: (B, S) prompt batch -> generations + offload accounting.
 
         One compiled-program dispatch; host sync happens exactly once, after
-        the full cascade, via ``_host_fetch``.
+        the full cascade, via ``_host_fetch``.  ``seeds`` (B,) int32
+        per-request sampling seeds (used when ``self.temperature > 0``;
+        typically the request ids, so sampled continuations match the
+        continuous path's).
         """
         b, s = tokens.shape
         ent = self._executable(b, s)
         theta = jnp.asarray(
             self.online_policy.theta if self.online_policy is not None
             else self.hi.theta, jnp.float32)
+        seeds = (jnp.zeros((b,), jnp.int32) if seeds is None
+                 else jnp.asarray(seeds, jnp.int32))
         t0 = time.perf_counter()
         with warnings.catch_warnings():
             warnings.filterwarnings("ignore", message=".*[Dd]onat")
             out, ent[1], ent[2] = ent[0](
                 self.s.params, self.l.params,
-                jnp.asarray(tokens, jnp.int32), theta, ent[1], ent[2])
+                jnp.asarray(tokens, jnp.int32), theta,
+                jnp.asarray(self.temperature, jnp.float32), seeds,
+                ent[1], ent[2])
         host = _host_fetch(out)       # the single device→host sync point
         t1 = time.perf_counter()
 
@@ -307,6 +359,56 @@ class HIEngine:
             "served_remote": np.asarray(decision.served_remote),
         }
 
+    def serve_stream(self, requests, *, buckets=(32, 64), num_slots: int = 8,
+                     l_slots: int = None, page_size: int = 16,
+                     admit_width: int = None, decode_block: int = 4
+                     ) -> Dict[int, Dict[str, np.ndarray]]:
+        """Continuous-batching entry point: serve ``requests`` (an iterable of
+        ``batcher.Request``) through slot-level admission over the paged KV
+        pools instead of drained (B, bucket) batches.
+
+        Requests are bucketized by the same ladder the drain path uses, so
+        greedy outputs are token-identical to ``serve`` on the same traffic
+        for ANY ``admit_width`` (batched admission prefill) / ``decode_block``
+        (fused decode steps per tick); unlike the drain path, a finished or
+        escalated sequence's slot is re-admitted IMMEDIATELY, per-request
+        ``max_new_tokens`` / ``temperature`` / ``eos_id`` are honoured, and
+        ONE executable serves every bucket (``stats['stream_compiles']``
+        stays at 1).
+
+        Returns per-request result records keyed by request_id.
+        """
+        from repro.serving.batcher import AdmissionQueue
+        from repro.serving.scheduler import ContinuousScheduler
+
+        key = (tuple(sorted(buckets)), num_slots, l_slots, page_size,
+               admit_width, decode_block)
+        if self._stream is None or self._stream[0] != key:
+            sched = ContinuousScheduler(
+                self.s, self.l, self.hi, max_prompt_len=max(buckets),
+                max_new_tokens=self.max_new_tokens, num_slots=num_slots,
+                l_slots=l_slots, page_size=page_size,
+                admit_width=admit_width, decode_block=decode_block,
+                use_kernel=self.use_kernel, temperature=self.temperature)
+            self._stream = (key, sched)
+            self.stats["stream_compiles"] += sched.stats["compiles"]
+        sched = self._stream[1]
+        sched.set_default_temperature(self.temperature)
+        queue = AdmissionQueue(buckets=buckets)
+        for r in requests:
+            queue.submit(r)
+        theta = (self.online_policy.theta if self.online_policy is not None
+                 else self.hi.theta)
+        ticks0, time0 = sched.stats["ticks"], sched.stats["serve_time"]
+        results = sched.run(queue, theta=theta)
+        self.stats["requests"] += sched.stats["requests"]
+        sched.stats["requests"] = 0
+        self.stats["offloaded"] += sched.stats["offloaded"]
+        sched.stats["offloaded"] = 0
+        self.stats["stream_ticks"] += sched.stats["ticks"] - ticks0
+        self.stats["serve_time"] += sched.stats["serve_time"] - time0
+        return results
+
     def summary(self) -> Dict[str, float]:
         n = max(self.stats["requests"], 1)
         return {
@@ -318,7 +420,8 @@ class HIEngine:
 
 def build_engine(cfg: ModelConfig, hi: HIConfig, rng=None, dtype=jnp.float32,
                  cache_len: int = 128, max_new_tokens: int = 8,
-                 use_kernel: bool = False) -> HIEngine:
+                 use_kernel: bool = False,
+                 temperature: float = 0.0) -> HIEngine:
     """Construct an S/L cascade for one architecture family: L = reduced
     assigned config (CPU-runnable), S = its s_variant."""
     rng = rng if rng is not None else jax.random.PRNGKey(0)
@@ -329,4 +432,4 @@ def build_engine(cfg: ModelConfig, hi: HIConfig, rng=None, dtype=jnp.float32,
     s_params = model_zoo.init_params(k2, s_cfg, dtype)
     return HIEngine(TierModel(s_cfg, s_params), TierModel(l_cfg, l_params),
                     hi, cache_len=cache_len, max_new_tokens=max_new_tokens,
-                    use_kernel=use_kernel)
+                    use_kernel=use_kernel, temperature=temperature)

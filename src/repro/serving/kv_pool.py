@@ -1,0 +1,122 @@
+"""Paged KV pool: ONE donated device allocation per tier + a host-side page
+allocator.
+
+The drain-path engine keeps a donated contiguous cache per COMPILED SHAPE —
+every (batch, bucket) pair owns a full (L, B, cache_len, K, Dh) buffer.  The
+pool replaces all of them with a single physical allocation per tier,
+``model_zoo.init_paged_cache``: attention K/V is cut into ``num_pages`` pages
+of ``page_size`` positions, and an int32 block table maps each decode slot's
+logical pages to physical ones.  Buckets stop being a compile-time property
+of the cache: every prompt length shares the same buffers and therefore the
+same executable.
+
+Page 0 is the NULL page: freed block-table rows and idle slots point at it,
+it receives the (benign, raced) writes of idle slots, and no positional mask
+ever exposes its contents.  The allocator is deliberately host-side and
+trivial — a LIFO free list — because allocation happens at request admission
+(milliseconds), not inside the device program (microseconds).
+
+SSM-family tiers have constant-size per-slot state instead of pages; the
+pool still tracks slot occupancy through the same interface so the scheduler
+is family-agnostic (the block table is simply ignored by the SSM decode).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model_zoo
+
+
+class KVPool:
+    """Device page pool + block tables + free-list allocator for one tier.
+
+    ``buffers`` is the device pytree that the scheduler threads (donated)
+    through every tick; ``block`` is the host-side (num_slots, n_pages) int32
+    block table passed as a small operand each tick.
+    """
+
+    def __init__(self, cfg: ModelConfig, num_slots: int, max_context: int,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 dtype=jnp.bfloat16):
+        if max_context % page_size:
+            raise ValueError(f"max_context {max_context} must be a multiple "
+                             f"of page_size {page_size}")
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.page_size = page_size
+        self.n_pages_per_slot = max_context // page_size
+        if num_pages is None:
+            # enough for every slot to hold a full-context sequence, + null
+            num_pages = num_slots * self.n_pages_per_slot + 1
+        if num_pages < 2:
+            raise ValueError("need at least one non-null page")
+        self.num_pages = num_pages
+        self.buffers = model_zoo.init_paged_cache(cfg, num_slots, num_pages,
+                                                  page_size, dtype)
+        self.block = np.zeros((num_slots, self.n_pages_per_slot), np.int32)
+        # LIFO free list; physical page 0 is the null page, never allocated
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._owned: Dict[int, List[int]] = {}
+
+    # -- allocator ----------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_needed(self, context_len: int) -> int:
+        return -(-context_len // self.page_size)        # ceil div
+
+    def can_alloc(self, context_len: int) -> bool:
+        return self.pages_needed(context_len) <= len(self._free)
+
+    def alloc(self, slot: int, context_len: int) -> None:
+        """Give ``slot`` enough pages for ``context_len`` positions; the rest
+        of its block-table row points at the null page."""
+        if slot in self._owned:
+            raise ValueError(f"slot {slot} already holds pages")
+        n = self.pages_needed(context_len)
+        if n > self.n_pages_per_slot:
+            raise ValueError(
+                f"context {context_len} needs {n} pages > per-slot maximum "
+                f"{self.n_pages_per_slot}")
+        if n > len(self._free):
+            raise ValueError(
+                f"pool exhausted: need {n} pages, {len(self._free)} free")
+        pages = [self._free.pop() for _ in range(n)]
+        self.block[slot, :] = 0
+        self.block[slot, :n] = pages
+        self._owned[slot] = pages
+
+    def free(self, slot: int) -> None:
+        """Return ``slot``'s pages to the free list and null its row.  Stale
+        page contents are never scrubbed — the positional mask plus the
+        prefill overwrite make them unobservable to the next owner."""
+        pages = self._owned.pop(slot, None)
+        if pages is None:
+            raise ValueError(f"slot {slot} holds no pages")
+        self._free.extend(reversed(pages))
+        self.block[slot, :] = 0
+
+    def owned(self, slot: int) -> List[int]:
+        return list(self._owned.get(slot, []))
+
+    def check_invariants(self) -> None:
+        """Debug/test hook: no page is simultaneously free and owned, owned
+        sets are disjoint, and every non-null block-table entry is owned."""
+        owned_all: List[int] = []
+        for pages in self._owned.values():
+            owned_all.extend(pages)
+        assert len(set(owned_all)) == len(owned_all), "page owned twice"
+        assert not (set(owned_all) & set(self._free)), "page free AND owned"
+        assert 0 not in owned_all, "null page allocated"
+        assert len(owned_all) + len(self._free) == self.num_pages - 1, \
+            "pages leaked"
+        for slot in range(self.num_slots):
+            live = set(self.block[slot][self.block[slot] > 0].tolist())
+            assert live <= set(self._owned.get(slot, [])), \
+                f"slot {slot} block row references unowned pages"

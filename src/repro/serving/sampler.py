@@ -1,4 +1,12 @@
-"""Token samplers."""
+"""Token samplers.
+
+``sample`` is the serving path's entry point: greedy when temperature <= 0
+(bitwise-identical to :func:`greedy`, which keeps the drain/stream
+equivalence tests exact), categorical otherwise.  Keys are PER REQUEST and
+PER TOKEN INDEX (:func:`request_keys`), so a request's sampled continuation
+is reproducible regardless of which batch, slot, or tick it lands in — the
+property that makes temperature serving testable across schedulers.
+"""
 from __future__ import annotations
 
 import jax
@@ -13,3 +21,27 @@ def temperature(rng, logits: jnp.ndarray, temp: float = 1.0) -> jnp.ndarray:
     if temp <= 0:
         return greedy(logits)
     return jax.random.categorical(rng, logits / temp, axis=-1).astype(jnp.int32)
+
+
+def request_keys(seeds: jnp.ndarray, token_idx) -> jnp.ndarray:
+    """Per-request, per-token PRNG keys.
+
+    seeds: (B,) int32 request-derived seeds; token_idx: scalar or (B,) int32
+    index of the token being sampled within each request's generation.
+    Returns (B, 2) uint32 keys: ``fold_in(PRNGKey(seed), token_idx)``.
+    """
+    idx = jnp.broadcast_to(jnp.asarray(token_idx, jnp.uint32), seeds.shape)
+    keys = jax.vmap(jax.random.PRNGKey)(seeds.astype(jnp.uint32))
+    return jax.vmap(jax.random.fold_in)(keys, idx)
+
+
+def sample(keys: jnp.ndarray, logits: jnp.ndarray, temp) -> jnp.ndarray:
+    """keys: (B, 2) uint32; logits: (B, V); temp: traced scalar or (B,).
+
+    temp <= 0 selects greedy EXACTLY (the categorical branch is computed and
+    discarded — temp stays a traced operand so per-request temperatures and
+    online changes never retrace)."""
+    t = jnp.broadcast_to(jnp.asarray(temp, jnp.float32), (logits.shape[0],))
+    scaled = logits / jnp.maximum(t, 1e-6)[:, None]
+    cat = jax.vmap(lambda k, row: jax.random.categorical(k, row))(keys, scaled)
+    return jnp.where(t > 0, cat.astype(jnp.int32), greedy(logits))

@@ -1,0 +1,397 @@
+"""Continuous-batching scheduler over the paged KV pool.
+
+The drain-path ``HIEngine.serve`` admits a whole (B, bucket) batch, runs the
+cascade, and only then admits the next batch: a finished sequence's slot idles
+until the SLOWEST sequence in its batch finishes, and every bucket compiles
+its own executable with its own donated cache.  This module replaces batch
+draining with SLOT-level admission (Orca-style iteration scheduling; see the
+online-HI line of work, arXiv:2304.00891, for the per-sample admission model):
+
+* Each tier owns ``num_slots`` decode slots backed by ONE :class:`KVPool`.
+* Every scheduler *tick* is ONE device dispatch of one AOT-compiled program —
+  the SAME program regardless of prompt bucket — that, per tier, (a) admits
+  up to ``admit_width`` queued requests in one batched (A, S_max) prefill
+  into their pages (``lax.cond``: skipped at runtime when nothing is
+  admitted), and (b) runs ``decode_block`` fused decode steps for ALL slots
+  at per-slot positions (a ``lax.scan``, like the drain path's fused decode).
+* Host sync happens exactly once per tick, post-cascade, through the
+  engine's ``_host_fetch`` — the drain path's single-sync discipline at tick
+  granularity.
+* A sequence frees its slot the moment it finishes (EOS or its OWN
+  max-new-tokens); if its mean confidence fell below theta it re-queues onto
+  the L tier's admission queue (the S→L escalation), otherwise the S result
+  is final.  Decode steps a released slot computed past its request's end
+  are discarded on the host (bounded by ``decode_block - 1``).
+
+Outputs are TOKEN-IDENTICAL to the drain path on the same bucketized
+prompts, for ANY ``admit_width``/``decode_block``: admission prefill reads
+each row's logits at ``length - 1`` of the same padded prompt, decode masks
+by position, and sampling keys are per-request + per-token-index — none of
+it depends on which slot, tick, or co-resident requests the sequence ran
+with.  ``tests/test_scheduler.py`` asserts this end to end.
+"""
+from __future__ import annotations
+
+import time
+import warnings
+from collections import deque
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import HIConfig, ModelConfig
+from repro.core.confidence import confidence as _confidence
+from repro.models import model_zoo
+from repro.serving import sampler
+from repro.serving.batcher import AdmissionQueue, AdmittedRequest
+from repro.serving.kv_pool import KVPool
+
+
+def _tier_tick_fn(cfg: ModelConfig, metric: str, use_kernel: bool,
+                  decode_block: int):
+    """Device-side per-tier tick: batched cond-prefill + K fused decode
+    steps for all slots."""
+
+    def conf_of(logits, theta):
+        if use_kernel:
+            from repro.kernels import ops as kops
+            return kops.hi_gate(logits, theta, metric=metric)[0]
+        return _confidence(logits, metric)
+
+    def tick(params, theta, tin, pool):
+        a = tin["admit_tokens"].shape[0]
+
+        def admit(pool):
+            return model_zoo.prefill_paged(
+                params, cfg, tin["admit_tokens"], tin["admit_len"],
+                tin["admit_slot"], tin["admit_blocks"], pool,
+                use_kernel=use_kernel)
+
+        def skip(pool):
+            return jnp.zeros((a, cfg.vocab_size), jnp.float32), pool
+
+        logits0, pool = jax.lax.cond(tin["any_admit"], admit, skip, pool)
+        conf0 = conf_of(logits0, theta)                          # (A,)
+        keys0 = sampler.request_keys(tin["admit_seed"], 0)
+        tok0 = sampler.sample(keys0, logits0, tin["admit_temp"])  # (A,)
+
+        # admitted slots decode their own first tokens in the same tick;
+        # padded admission rows carry an out-of-range slot -> dropped
+        last0 = tin["last_tok"].at[tin["admit_slot"]].set(tok0, mode="drop")
+        block = tin["block"]
+        b = block.shape[0]
+
+        def body(carry, k):
+            last, pool = carry
+            logits, pool = model_zoo.decode_step_paged(
+                params, cfg, last[:, None], tin["pos"] + k, block, pool,
+                use_kernel=use_kernel)
+            confs_k = conf_of(logits, theta)
+            keys = sampler.request_keys(tin["seeds"], tin["tok_idx"] + k)
+            toks_k = sampler.sample(keys, logits, tin["temps"])
+            return (toks_k, pool), (toks_k, confs_k)
+
+        def decode(pool):
+            (_, pool), (toks, confs) = jax.lax.scan(body, (last0, pool),
+                                                    jnp.arange(decode_block))
+            return toks, confs, pool
+
+        def idle(pool):
+            # this tier has no live slots this tick (e.g. the L tier before
+            # the first escalation arrives): skip the decode entirely
+            return (jnp.zeros((decode_block, b), jnp.int32),
+                    jnp.zeros((decode_block, b), jnp.float32), pool)
+
+        toks, confs, pool = jax.lax.cond(tin["any_live"], decode, idle, pool)
+        return {"admit_tok": tok0, "admit_conf": conf0,
+                "toks": toks, "confs": confs}, pool          # toks (K, B)
+
+    return tick
+
+
+@dataclass
+class _Active:
+    """One request occupying a decode slot."""
+    adm: AdmittedRequest
+    steps: int
+    tokens: List[int] = field(default_factory=list)
+    confs: List[float] = field(default_factory=list)
+    hit_eos: bool = False
+
+    def emit(self, tok: int, conf: float) -> None:
+        if self.done:
+            return
+        self.tokens.append(int(tok))
+        self.confs.append(float(conf))
+        eos = self.adm.request.eos_id
+        if eos is not None and int(tok) == eos:
+            self.hit_eos = True
+
+    @property
+    def done(self) -> bool:
+        return self.hit_eos or len(self.tokens) >= self.steps
+
+
+class _TierRuntime:
+    """Host-side slot state for one tier (numpy mirrors of tick operands)."""
+
+    def __init__(self, cfg: ModelConfig, num_slots: int, max_context: int,
+                 page_size: int, admit_width: int, dtype):
+        self.pool = KVPool(cfg, num_slots, max_context, page_size, dtype=dtype)
+        self.num_slots = num_slots
+        self.admit_width = admit_width
+        self.default_temp = 0.0      # engine-level fallback (Request wins)
+        self.slot_req: List[Optional[_Active]] = [None] * num_slots
+        self.last_tok = np.zeros((num_slots,), np.int32)
+        self.pos = np.zeros((num_slots,), np.int32)
+        self.seeds = np.zeros((num_slots,), np.int32)
+        self.tok_idx = np.zeros((num_slots,), np.int32)
+        self.temps = np.zeros((num_slots,), np.float32)
+        self.admitted: List[int] = []    # slots admitted THIS tick, row order
+
+    @property
+    def busy(self) -> int:
+        return sum(r is not None for r in self.slot_req)
+
+    def free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                return i
+        return None
+
+    def admit(self, adm: AdmittedRequest, steps: int, decode_block: int
+              ) -> bool:
+        """Claim a slot + pages for ``adm``; False if no capacity this tick."""
+        slot = self.free_slot()
+        # decode writes reach bucket + steps - 2, plus <= K-1 overrun steps
+        context = adm.bucket + max(steps - 1, 1) + (decode_block - 1)
+        if slot is None or not self.pool.can_alloc(context):
+            return False
+        self.pool.alloc(slot, context)
+        self.slot_req[slot] = _Active(adm, steps)
+        self.pos[slot] = adm.bucket
+        self.seeds[slot] = adm.request.request_id
+        self.tok_idx[slot] = 1                 # token 0 comes from the prefill
+        self.temps[slot] = (adm.request.temperature
+                            if adm.request.temperature > 0
+                            else self.default_temp)
+        self.last_tok[slot] = 0                # replaced on-device by tok0
+        self.admitted.append(slot)
+        return True
+
+    def release(self, slot: int) -> _Active:
+        rec = self.slot_req[slot]
+        self.slot_req[slot] = None
+        self.pool.free(slot)
+        self.pos[slot] = 0
+        self.tok_idx[slot] = 0
+        self.temps[slot] = 0.0
+        self.last_tok[slot] = 0
+        return rec
+
+    def tick_inputs(self, s_max: int) -> Dict:
+        a = self.admit_width
+        tokens = np.zeros((a, s_max), np.int32)
+        lens = np.ones((a,), np.int32)
+        slots = np.full((a,), self.num_slots, np.int32)    # drop sentinel
+        blocks = np.zeros((a, self.pool.n_pages_per_slot), np.int32)
+        seeds = np.zeros((a,), np.int32)
+        temps = np.zeros((a,), np.float32)
+        for row, slot in enumerate(self.admitted):
+            adm = self.slot_req[slot].adm
+            tokens[row, : adm.bucket] = adm.tokens
+            lens[row] = adm.bucket
+            slots[row] = slot
+            blocks[row] = self.pool.block[slot]
+            seeds[row] = self.seeds[slot]
+            temps[row] = self.temps[slot]
+        return {
+            "last_tok": jnp.asarray(self.last_tok),
+            "pos": jnp.asarray(self.pos),
+            "block": jnp.asarray(self.pool.block),
+            "seeds": jnp.asarray(self.seeds),
+            "tok_idx": jnp.asarray(self.tok_idx),
+            "temps": jnp.asarray(self.temps),
+            "any_admit": jnp.asarray(bool(self.admitted)),
+            "any_live": jnp.asarray(self.busy > 0),
+            "admit_tokens": jnp.asarray(tokens),
+            "admit_len": jnp.asarray(lens),
+            "admit_slot": jnp.asarray(slots),
+            "admit_blocks": jnp.asarray(blocks),
+            "admit_seed": jnp.asarray(seeds),
+            "admit_temp": jnp.asarray(temps),
+        }
+
+
+class ContinuousScheduler:
+    """Slot-level admission over paged pools for BOTH cascade tiers.
+
+    One instance = one AOT-compiled tick executable (``stats['compiles']``
+    stays at 1 no matter how many prompt buckets flow through — the paged
+    pool removed the bucket from every device shape).  ``admit_width``
+    batches admission prefills like the drain path batches prompts;
+    ``decode_block`` fuses that many decode steps per tick like the drain
+    path's decode scan (host-discarded overrun past a request's end is the
+    latency/throughput knob).
+    """
+
+    def __init__(self, s_tier, l_tier, hi: HIConfig, *, max_prompt_len: int,
+                 max_new_tokens: int, num_slots: int = 8,
+                 l_slots: Optional[int] = None, page_size: int = 16,
+                 admit_width: Optional[int] = None, decode_block: int = 4,
+                 use_kernel: bool = False, temperature: float = 0.0,
+                 cache_dtype=jnp.bfloat16):
+        if max_prompt_len % page_size:
+            raise ValueError(f"max_prompt_len {max_prompt_len} must be a "
+                             f"multiple of page_size {page_size}")
+        self.s = s_tier
+        self.l = l_tier
+        self.hi = hi
+        self.max_prompt_len = max_prompt_len
+        self.max_new_tokens = max_new_tokens
+        self.decode_block = max(1, decode_block)
+        l_slots = l_slots if l_slots is not None else max(2, num_slots // 2)
+        admit_width = admit_width if admit_width is not None else num_slots
+        page = page_size
+        raw_ctx = max_prompt_len + max_new_tokens + self.decode_block - 1
+        max_context = -(-raw_ctx // page) * page
+        self.srt = _TierRuntime(s_tier.cfg, num_slots, max_context, page,
+                                admit_width, cache_dtype)
+        self.lrt = _TierRuntime(l_tier.cfg, l_slots, max_context, page,
+                                min(admit_width, l_slots), cache_dtype)
+        self.set_default_temperature(temperature)
+        self.stats: Dict[str, float] = {
+            "requests": 0, "offloaded": 0, "ticks": 0, "compiles": 0,
+            "serve_time": 0.0}
+
+        s_tick = _tier_tick_fn(s_tier.cfg, hi.metric, use_kernel,
+                               self.decode_block)
+        l_tick = _tier_tick_fn(l_tier.cfg, hi.metric, use_kernel,
+                               self.decode_block)
+
+        def tick(s_params, l_params, theta, s_in, l_in, s_pool, l_pool):
+            s_out, s_pool = s_tick(s_params, theta, s_in, s_pool)
+            l_out, l_pool = l_tick(l_params, theta, l_in, l_pool)
+            return {"s": s_out, "l": l_out}, s_pool, l_pool
+
+        spec = partial(jax.tree.map,
+                       lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype))
+        s_in0 = self.srt.tick_inputs(max_prompt_len)
+        l_in0 = self.lrt.tick_inputs(max_prompt_len)
+        with warnings.catch_warnings():
+            warnings.filterwarnings("ignore", message=".*[Dd]onat")
+            self._exec = jax.jit(tick, donate_argnums=(5, 6)).lower(
+                spec(self.s.params), spec(self.l.params),
+                jax.ShapeDtypeStruct((), jnp.float32),
+                spec(s_in0), spec(l_in0),
+                spec(self.srt.pool.buffers),
+                spec(self.lrt.pool.buffers)).compile()
+        self.stats["compiles"] += 1
+
+    def set_default_temperature(self, temperature: float) -> None:
+        """Engine-level sampling temperature used for requests that don't set
+        their own (Request.temperature > 0 wins) — keeps ``serve_stream``
+        consistent with ``serve``'s engine-wide temperature."""
+        self.srt.default_temp = float(temperature)
+        self.lrt.default_temp = float(temperature)
+
+    # -- host loop ----------------------------------------------------------
+
+    def run(self, queue: AdmissionQueue, *, theta: Optional[float] = None
+            ) -> Dict[int, Dict[str, Any]]:
+        """Drain ``queue`` through the slots; returns per-request records
+        keyed by request_id: tokens / s_tokens / confidence / offloaded /
+        served_remote (mirroring ``HIEngine.serve``'s fields)."""
+        from repro.serving import engine as engine_mod   # _host_fetch hook
+
+        theta = float(self.hi.theta if theta is None else theta)
+        theta_j = jnp.asarray(theta, jnp.float32)
+        results: Dict[int, Dict[str, Any]] = {}
+        l_queue: deque = deque()
+        t0 = time.perf_counter()
+
+        while len(queue) or l_queue or self.srt.busy or self.lrt.busy:
+            self._try_admit(self.srt, queue)
+            self._try_admit(self.lrt, l_queue)
+            if (not self.srt.admitted and not self.lrt.admitted
+                    and not self.srt.busy and not self.lrt.busy):
+                raise RuntimeError(
+                    "scheduler stalled: pool too small to admit a single "
+                    "request — raise num_pages / num_slots")
+            s_in = self.srt.tick_inputs(self.max_prompt_len)
+            l_in = self.lrt.tick_inputs(self.max_prompt_len)
+            with warnings.catch_warnings():
+                warnings.filterwarnings("ignore", message=".*[Dd]onat")
+                out, self.srt.pool.buffers, self.lrt.pool.buffers = \
+                    self._exec(self.s.params, self.l.params, theta_j,
+                               s_in, l_in, self.srt.pool.buffers,
+                               self.lrt.pool.buffers)
+            host = engine_mod._host_fetch(out)   # the tick's single sync
+            self.stats["ticks"] += 1
+            self._absorb(self.srt, host["s"],
+                         lambda rec: self._finish_s(rec, theta, l_queue,
+                                                    results))
+            self._absorb(self.lrt, host["l"],
+                         lambda rec: self._finish_l(rec, results))
+
+        self.stats["serve_time"] += time.perf_counter() - t0
+        return results
+
+    # -- admission / completion -------------------------------------------
+
+    def _try_admit(self, rt: _TierRuntime, queue) -> None:
+        """Admit up to ``admit_width`` queued requests into free slots.
+        ``queue`` is the AdmissionQueue (S tier) or the escalation deque
+        (L tier); both speak the same popleft/appendleft head interface."""
+        rt.admitted = []
+        while len(rt.admitted) < rt.admit_width and len(queue):
+            if rt.free_slot() is None:
+                break
+            adm = queue.popleft()
+            steps = min(adm.request.max_new_tokens, self.max_new_tokens)
+            if not rt.admit(adm, steps, self.decode_block):
+                queue.appendleft(adm)   # no pages this tick: retry next tick
+                break
+
+    def _absorb(self, rt: _TierRuntime, out: Dict[str, np.ndarray],
+                finish) -> None:
+        for row, slot in enumerate(rt.admitted):
+            rt.slot_req[slot].emit(out["admit_tok"][row],
+                                   out["admit_conf"][row])
+        k_steps = out["toks"].shape[0]
+        for slot in range(rt.num_slots):
+            rec = rt.slot_req[slot]
+            if rec is None:
+                continue
+            for k in range(k_steps):
+                rec.emit(out["toks"][k][slot], out["confs"][k][slot])
+            rt.last_tok[slot] = int(out["toks"][k_steps - 1][slot])
+            rt.tok_idx[slot] += k_steps
+            rt.pos[slot] += k_steps
+            if rec.done:
+                finish(rt.release(slot))
+
+    def _finish_s(self, rec: _Active, theta: float, l_queue: deque,
+                  results: Dict) -> None:
+        conf = float(np.mean(np.asarray(rec.confs, np.float32)))
+        rid = rec.adm.request.request_id
+        self.stats["requests"] += 1
+        results[rid] = {
+            "tokens": np.asarray(rec.tokens, np.int32),
+            "s_tokens": np.asarray(rec.tokens, np.int32),
+            "confidence": conf,
+            "offloaded": conf < theta,
+            "served_remote": False,
+        }
+        if conf < theta:
+            self.stats["offloaded"] += 1
+            l_queue.append(rec.adm)
+
+    def _finish_l(self, rec: _Active, results: Dict) -> None:
+        rid = rec.adm.request.request_id
+        results[rid]["tokens"] = np.asarray(rec.tokens, np.int32)
+        results[rid]["served_remote"] = True

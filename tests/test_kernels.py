@@ -125,3 +125,23 @@ def test_streamed_decode_matches_sdpa():
     out_f = L._sdpa(q, ck, cv, valid[None, None, :])
     np.testing.assert_allclose(np.asarray(out_s), np.asarray(out_f),
                                rtol=3e-5, atol=3e-5)
+
+
+def test_decode_attention_paged_matches_gather_oracle():
+    """The paged kernel (block table as scalar-prefetch, physical pages DMA'd
+    by the index_map) == gathering the pages and running dense attention."""
+    from repro.models import layers as L
+    rng = np.random.default_rng(3)
+    b, h, k, d, page, npg, P = 3, 4, 2, 16, 8, 4, 13
+    q = jnp.asarray(rng.standard_normal((b, 1, h, d)), jnp.float32)
+    pk = jnp.asarray(rng.standard_normal((P, page, k, d)), jnp.float32)
+    pv = jnp.asarray(rng.standard_normal((P, page, k, d)), jnp.float32)
+    block = jnp.asarray(rng.integers(0, P, (b, npg)), jnp.int32)
+    pos = jnp.asarray([5, 17, 31], jnp.int32)       # per-slot depths
+    valid = jnp.arange(npg * page)[None, :] <= pos[:, None]
+    out = ops.decode_attention_paged(q, pk, pv, block, valid)
+    kk = pk[block].reshape(b, npg * page, k, d)
+    vv = pv[block].reshape(b, npg * page, k, d)
+    ref_out = L._sdpa(q, kk, vv, valid[:, None, :])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               rtol=3e-5, atol=3e-5)

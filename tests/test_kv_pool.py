@@ -1,0 +1,100 @@
+"""KVPool: page alloc/free invariants and no cross-request page leakage
+after slot reuse."""
+import numpy as np
+import pytest
+
+from repro.configs.base import HIConfig
+from repro.configs.registry import ARCHS
+from repro.serving.kv_pool import KVPool
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return ARCHS["qwen2-1.5b"].reduced()
+
+
+def test_alloc_free_roundtrip(cfg):
+    pool = KVPool(cfg, num_slots=4, max_context=32, page_size=8)
+    total = pool.free_pages
+    assert total == 4 * 4          # 4 slots x 4 pages each (+ null excluded)
+    pool.alloc(0, 20)              # ceil(20/8) = 3 pages
+    assert pool.free_pages == total - 3
+    assert len(pool.owned(0)) == 3
+    # unallocated logical pages point at the null page
+    assert (pool.block[0][3:] == 0).all()
+    assert (pool.block[0][:3] > 0).all()
+    pool.check_invariants()
+    pool.free(0)
+    assert pool.free_pages == total
+    assert (pool.block[0] == 0).all()
+    pool.check_invariants()
+
+
+def test_owned_pages_disjoint_across_slots(cfg):
+    pool = KVPool(cfg, num_slots=4, max_context=32, page_size=8)
+    for slot in range(4):
+        pool.alloc(slot, 32)
+    owned = [p for s in range(4) for p in pool.owned(s)]
+    assert len(set(owned)) == len(owned)          # no page owned twice
+    assert 0 not in owned                          # null page never allocated
+    assert pool.free_pages == 0
+    pool.check_invariants()
+
+
+def test_exhaustion_and_misuse_raise(cfg):
+    pool = KVPool(cfg, num_slots=2, max_context=16, page_size=8,
+                  num_pages=3)                     # null + 2 usable pages
+    pool.alloc(0, 16)                              # takes both pages
+    with pytest.raises(ValueError, match="exhausted"):
+        pool.alloc(1, 8)
+    with pytest.raises(ValueError, match="already holds"):
+        pool.alloc(0, 8)
+    pool.free(0)
+    with pytest.raises(ValueError, match="holds no pages"):
+        pool.free(0)
+    with pytest.raises(ValueError, match="per-slot maximum"):
+        pool.alloc(0, 999)
+
+
+def test_slot_reuse_recycles_pages(cfg):
+    """Freed pages are reusable and the new owner's block row never aliases
+    a live slot's pages (the allocator half of the no-leakage guarantee —
+    the serving half is test_scheduler's fresh-vs-reused equivalence)."""
+    pool = KVPool(cfg, num_slots=2, max_context=32, page_size=8)
+    pool.alloc(0, 32)
+    first = set(pool.owned(0))
+    pool.alloc(1, 32)
+    pool.free(0)
+    pool.alloc(0, 32)                              # LIFO: gets pages back
+    assert set(pool.owned(0)) == first
+    assert not set(pool.owned(0)) & set(pool.owned(1))
+    pool.check_invariants()
+
+
+def test_no_stale_reads_after_slot_reuse():
+    """Serving request B in a slot previously used by a LONGER request A must
+    give bit-identical output to serving B on a fresh engine: stale page
+    contents (never scrubbed) must be unobservable through the positional
+    mask + block table."""
+    from repro.configs.registry import ARCHS
+    from repro.serving.batcher import Request
+    from repro.serving.engine import build_engine
+
+    cfg = ARCHS["qwen2-1.5b"].reduced()
+    hi = HIConfig(theta=0.0, capacity_factor=1.0)   # keep everything on S
+    rng = np.random.default_rng(11)
+    long_req = Request(0, rng.integers(0, cfg.vocab_size, 32).astype(np.int32),
+                       max_new_tokens=3)
+    short_req = Request(1, rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                        max_new_tokens=3)
+
+    eng = build_engine(cfg, hi, max_new_tokens=3, cache_len=64)
+    eng.serve_stream([long_req], buckets=(8, 32), num_slots=1, page_size=8)
+    reused = eng.serve_stream([short_req], buckets=(8, 32), num_slots=1,
+                              page_size=8)
+
+    fresh_eng = build_engine(cfg, hi, max_new_tokens=3, cache_len=64)
+    fresh = fresh_eng.serve_stream([short_req], buckets=(8, 32), num_slots=1,
+                                   page_size=8)
+    np.testing.assert_array_equal(reused[1]["tokens"], fresh[1]["tokens"])
+    assert reused[1]["confidence"] == fresh[1]["confidence"]

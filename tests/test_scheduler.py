@@ -1,0 +1,141 @@
+"""Continuous-batching scheduler: drain-equivalence on mixed-length traffic,
+one compiled executable across buckets, the per-tick single-sync guarantee,
+and per-request temperature / max-new-tokens / EOS semantics."""
+import numpy as np
+import pytest
+
+from repro.configs.base import HIConfig
+from repro.configs.registry import ARCHS
+from repro.serving import engine as engine_mod
+from repro.serving.batcher import Request
+from repro.serving.engine import build_engine
+
+STEPS = 3
+
+
+def _mixed_requests(cfg, lens, rng, steps=STEPS, temperature=0.0):
+    return [Request(i, rng.integers(0, cfg.vocab_size, L).astype(np.int32),
+                    max_new_tokens=steps, temperature=temperature)
+            for i, L in enumerate(lens)]
+
+
+def _drain_by_bucket(eng, reqs, temps=False):
+    """Reference: serve uniform-bucket batches through the drain path."""
+    out = {}
+    for L in sorted({len(r.prompt) for r in reqs}):
+        sub = [r for r in reqs if len(r.prompt) == L]
+        toks = np.stack([r.prompt for r in sub])
+        seeds = np.asarray([r.request_id for r in sub], np.int32)
+        res = eng.serve(toks, seeds=seeds)
+        for j, r in enumerate(sub):
+            out[r.request_id] = {k: res[k][j] for k in res}
+    return out
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "mamba2-370m"])
+def test_stream_matches_drain_on_mixed_lengths(arch):
+    """serve_stream must produce token-identical greedy outputs (S tokens,
+    merged tokens, confidence, offload set) to the drain path on mixed-length
+    traffic — while compiling exactly ONE executable across all buckets."""
+    cfg = ARCHS[arch].reduced()
+    hi = HIConfig(theta=0.6, capacity_factor=1.0)   # no capacity drops
+    rng = np.random.default_rng(7)
+    reqs = _mixed_requests(cfg, [8, 16, 8, 16, 8], rng)
+
+    eng_d = build_engine(cfg, hi, max_new_tokens=STEPS, cache_len=32)
+    drain = _drain_by_bucket(eng_d, reqs)
+    eng_s = build_engine(cfg, hi, max_new_tokens=STEPS, cache_len=32)
+    stream = eng_s.serve_stream(reqs, buckets=(8, 16), num_slots=3,
+                                page_size=8)
+
+    assert set(stream) == {r.request_id for r in reqs}
+    for rid, rec in stream.items():
+        np.testing.assert_array_equal(rec["tokens"], drain[rid]["tokens"])
+        np.testing.assert_array_equal(rec["s_tokens"], drain[rid]["s_tokens"])
+        assert rec["offloaded"] == bool(drain[rid]["offloaded"])
+        np.testing.assert_allclose(rec["confidence"],
+                                   drain[rid]["confidence"], atol=1e-5)
+    # the paged pool removed the bucket from every device shape
+    assert eng_s.stats["stream_compiles"] == 1
+    # the drain path needed one executable per bucket
+    assert eng_d.stats["compiles"] == 2
+
+
+def test_stream_single_sync_per_tick(monkeypatch):
+    """Each scheduler tick performs exactly ONE device->host sync, through
+    the engine's ``_host_fetch`` — no hidden fetches in admission,
+    escalation, or completion handling."""
+    calls = []
+    real = engine_mod._host_fetch
+    monkeypatch.setattr(engine_mod, "_host_fetch",
+                        lambda tree: (calls.append(1), real(tree))[1])
+    cfg = ARCHS["qwen2-1.5b"].reduced()
+    eng = build_engine(cfg, HIConfig(theta=0.6, capacity_factor=1.0),
+                       max_new_tokens=STEPS, cache_len=32)
+    reqs = _mixed_requests(cfg, [8, 16, 8], np.random.default_rng(0))
+    eng.serve_stream(reqs, buckets=(8, 16), num_slots=2, page_size=8)
+    assert len(calls) == eng.stats["stream_ticks"] > 0
+
+
+def test_stream_temperature_matches_drain():
+    """Per-request seeded sampling: temp > 0 continuations are reproducible
+    across the two schedulers (keys depend only on request id + token index,
+    not slot / tick / batch row)."""
+    cfg = ARCHS["qwen2-1.5b"].reduced()
+    hi = HIConfig(theta=0.0, capacity_factor=1.0)   # S-only: compare S tokens
+    rng = np.random.default_rng(5)
+    reqs = _mixed_requests(cfg, [8, 8, 16], rng, temperature=0.7)
+
+    eng_d = build_engine(cfg, hi, max_new_tokens=STEPS, cache_len=32,
+                         temperature=0.7)
+    drain = _drain_by_bucket(eng_d, reqs)
+    eng_s = build_engine(cfg, hi, max_new_tokens=STEPS, cache_len=32)
+    stream = eng_s.serve_stream(reqs, buckets=(8, 16), num_slots=2,
+                                page_size=8)
+    for rid, rec in stream.items():
+        np.testing.assert_array_equal(rec["tokens"], drain[rid]["tokens"])
+    # and the sampled path actually differs from greedy
+    eng_g = build_engine(cfg, hi, max_new_tokens=STEPS, cache_len=32)
+    greedy = _drain_by_bucket(eng_g, reqs)
+    assert any(not np.array_equal(greedy[r]["tokens"], drain[r]["tokens"])
+               for r in drain)
+
+
+def test_stream_per_request_max_new_and_eos():
+    """Unlike the drain path's engine-wide step count, the scheduler honours
+    per-request max_new_tokens and stops early on EOS, freeing the slot."""
+    cfg = ARCHS["qwen2-1.5b"].reduced()
+    hi = HIConfig(theta=0.0, capacity_factor=1.0)
+    rng = np.random.default_rng(9)
+    r_short = Request(0, rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                      max_new_tokens=2)
+    r_long = Request(1, rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                     max_new_tokens=6)
+    eng = build_engine(cfg, hi, max_new_tokens=6, cache_len=32)
+    out = eng.serve_stream([r_short, r_long], buckets=(8,), num_slots=2,
+                           page_size=8)
+    assert len(out[0]["tokens"]) == 2
+    assert len(out[1]["tokens"]) == 6
+
+    # EOS: run greedy once, then replay with eos_id = the first token
+    first = int(out[1]["tokens"][0])
+    r_eos = Request(1, r_long.prompt, max_new_tokens=6, eos_id=first)
+    eng2 = build_engine(cfg, hi, max_new_tokens=6, cache_len=32)
+    out2 = eng2.serve_stream([r_eos], buckets=(8,), num_slots=2, page_size=8)
+    assert len(out2[1]["tokens"]) == 1
+    assert int(out2[1]["tokens"][0]) == first
+
+
+def test_stream_slot_count_smaller_than_traffic():
+    """More requests than slots: admission must recycle slots (the
+    continuous part) and still serve everyone exactly once."""
+    cfg = ARCHS["qwen2-1.5b"].reduced()
+    hi = HIConfig(theta=1.1, capacity_factor=1.0)   # everything escalates
+    rng = np.random.default_rng(4)
+    reqs = _mixed_requests(cfg, [8] * 5, rng)
+    eng = build_engine(cfg, hi, max_new_tokens=STEPS, cache_len=32)
+    out = eng.serve_stream(reqs, buckets=(8,), num_slots=2, page_size=8)
+    assert len(out) == 5
+    assert all(rec["offloaded"] and rec["served_remote"]
+               for rec in out.values())
+    assert eng.stats["offloaded"] == 5

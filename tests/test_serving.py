@@ -20,6 +20,38 @@ def test_batcher_padding_and_buckets():
     assert (batch.tokens[0, 3:] == 0).all()
 
 
+def test_pad_to_bucket_overflow_raises():
+    """Regression: prompts longer than the largest bucket used to be silently
+    clamped, and the pack loop then truncated the prompt (served corrupted
+    requests).  Now every entry point raises instead."""
+    from repro.serving.batcher import AdmissionQueue, pad_to_bucket
+    assert pad_to_bucket(8, (8, 16)) == 8
+    assert pad_to_bucket(9, (8, 16)) == 16
+    with pytest.raises(ValueError, match="exceeds the largest bucket"):
+        pad_to_bucket(17, (8, 16))
+    b = Batcher(batch_size=2, buckets=(8, 16))
+    with pytest.raises(ValueError, match="exceeds the largest bucket"):
+        b.submit(Request(0, np.ones(17, np.int32)))
+    q = AdmissionQueue(buckets=(8, 16))
+    with pytest.raises(ValueError, match="exceeds the largest bucket"):
+        q.submit(Request(0, np.ones(17, np.int32)))
+
+
+def test_admission_queue_bucketizes_like_batcher():
+    from repro.serving.batcher import AdmissionQueue
+    q = AdmissionQueue(buckets=(8, 16))
+    q.submit(Request(0, np.arange(1, 6, dtype=np.int32)))
+    q.submit(Request(1, np.arange(1, 13, dtype=np.int32)))
+    a = q.pop()
+    assert a.bucket == 8 and a.tokens.shape == (8,)
+    assert (a.tokens[:5] == np.arange(1, 6)).all() and (a.tokens[5:] == 0).all()
+    b = q.pop()
+    assert b.bucket == 16
+    assert q.pop() is None
+    q.push_front(b)
+    assert q.pop().request.request_id == 1
+
+
 def test_batcher_queue_drain():
     b = Batcher(batch_size=2, buckets=(8,))
     for i in range(5):
