@@ -138,6 +138,48 @@ def _paged_kernel(blk_ref, q_ref, k_ref, v_ref, mask_ref,
                   init=pl.program_id(2) == 0)
 
 
+def copy_pages_pallas(pool: jnp.ndarray, src_of: jnp.ndarray, *,
+                      interpret: bool = True) -> jnp.ndarray:
+    """Copy-on-write page duplication over a physical page pool.
+
+    pool: (L, P, page, K, D); src_of: (P,) int32 per-page SOURCE map —
+    identity everywhere except the COW destinations, which name the page
+    they clone.  The map is a scalar-prefetch operand (the same idiom as the
+    paged decode kernel's block table): grid step (l, p) DMAs physical page
+    ``src_of[p]`` into VMEM and writes it back out as page ``p``, so the
+    copy never round-trips through HBM-resident gather/scatter buffers and
+    every page is written exactly once (identity pages stream through
+    unchanged — no aliasing or output-revisiting hazards).
+
+    Admission schedules at most one COW per admitted request, so on TPU the
+    non-identity traffic is a handful of pages; the identity passthrough is
+    the price of a single well-formed grid.  Returns the updated pool.
+    """
+    l, p = pool.shape[:2]
+    blk = (1, 1) + pool.shape[2:]
+
+    def kernel(src_ref, in_ref, out_ref):
+        del src_ref          # consumed by the index_map, not the body
+        out_ref[...] = in_ref[...]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(l, p),
+        in_specs=[
+            pl.BlockSpec(blk, lambda li, pi, src: (li, src[pi]) +
+                         (0,) * (len(blk) - 2)),
+        ],
+        out_specs=pl.BlockSpec(blk, lambda li, pi, src: (li, pi) +
+                               (0,) * (len(blk) - 2)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        interpret=interpret,
+    )(src_of, pool)
+
+
 def decode_attention_paged_pallas(q: jnp.ndarray, pool_k: jnp.ndarray,
                                   pool_v: jnp.ndarray, block: jnp.ndarray,
                                   valid: jnp.ndarray, *,

@@ -54,6 +54,21 @@ def decode_attention_paged(q: jnp.ndarray, pool_k: jnp.ndarray,
                                              interpret=INTERPRET)
 
 
+@jax.jit
+def copy_pages(pool: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray
+               ) -> jnp.ndarray:
+    """Copy-on-write page duplication: pool pages ``dst`` become copies of
+    pages ``src`` (pairs padded with (0, 0) — null onto null).
+
+    pool: (L, P, page, K, D).  The (src, dst) pairs are expanded into a
+    per-page source map so the kernel writes every output page exactly once
+    (identity for non-COW pages) with the map scalar-prefetched — see
+    ``decode_attention.copy_pages_pallas``."""
+    p = pool.shape[1]
+    src_of = jnp.arange(p, dtype=jnp.int32).at[dst].set(src)
+    return _da.copy_pages_pallas(pool, src_of, interpret=INTERPRET)
+
+
 @functools.partial(jax.jit, static_argnames=("chunk",))
 def ssd(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
         C: jnp.ndarray, chunk: int = 128) -> Tuple[jnp.ndarray, jnp.ndarray]:

@@ -205,21 +205,64 @@ def _prefill_outer(params: Params, cfg: ModelConfig, s: int, b: int,
     return outer
 
 
+def init_prefix_cache(cfg: ModelConfig, entries: int, dtype=jnp.bfloat16):
+    """Full-prompt snapshot rows for the recurrent half of the hybrid: the
+    per-group mamba states + conv windows at the prompt boundary.  The
+    shared-attention K/V needs no snapshot — its prompt pages are retained
+    by the pool's prefix index and aliased on restore."""
+    g, k = _num_groups(cfg), cfg.shared_attn_every
+    h, p, n = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.ssm_d_inner + 2 * n
+    return {
+        "state": jnp.zeros((g, k, entries, h, p, n), jnp.float32),
+        "conv": jnp.zeros((g, k, entries, cfg.ssm_conv_width - 1, conv_dim),
+                          dtype),
+    }
+
+
+def snapshot_save(cfg: ModelConfig, cache: Params, prefix: Params,
+                  rows: jnp.ndarray, slots: jnp.ndarray) -> Params:
+    return dict(prefix,
+                state=prefix["state"].at[:, :, rows].set(
+                    cache["state"][:, :, slots], mode="drop"),
+                conv=prefix["conv"].at[:, :, rows].set(
+                    cache["conv"][:, :, slots], mode="drop"))
+
+
+def snapshot_restore(cfg: ModelConfig, cache: Params, prefix: Params,
+                     rows: jnp.ndarray, slots: jnp.ndarray) -> Params:
+    return dict(cache,
+                state=cache["state"].at[:, :, slots].set(
+                    prefix["state"][:, :, rows], mode="drop"),
+                conv=cache["conv"].at[:, :, slots].set(
+                    prefix["conv"][:, :, rows], mode="drop"))
+
+
 def prefill_paged(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
                   lengths: jnp.ndarray, slots: jnp.ndarray,
                   block_rows: jnp.ndarray, cache: Params, *,
-                  use_kernel: bool = False) -> Tuple[jnp.ndarray, Params]:
+                  use_kernel: bool = False,
+                  start=None) -> Tuple[jnp.ndarray, Params]:
     """Prefill a batch of admitted requests: per-group SSM states/conv
     windows land in slots ``slots``; shared-attention K/V lands in each
     slot's pages.  The group math is EXACTLY :func:`prefill`'s (shared
-    ``_prefill_outer``); only the K/V store differs."""
+    ``_prefill_outer``); only the K/V store differs.
+
+    ``start``: the hybrid family shares prefixes only at whole-prompt
+    granularity (the mamba state has no mid-prompt snapshot), so per row
+    ``start`` is 0 (miss: full prefill) or bucket (restore: every page write
+    redirected to the null page — the aliased prompt pages are read-only)."""
     h = params["embed"][tokens]
     b, s, _ = h.shape
+    page = cache["kp"].shape[2]
+    npg = s // page
+    wrows = (block_rows[:, :npg] if start is None
+             else L.suffix_write_rows(block_rows, start, npg, page))
 
     def store_kv(kv, k, v):
         pk, pv = kv
-        return (L.scatter_prefill_pages(pk, k, block_rows),
-                L.scatter_prefill_pages(pv, v, block_rows))
+        return (L.scatter_prefill_pages(pk, k, wrows),
+                L.scatter_prefill_pages(pv, v, wrows))
 
     outer = _prefill_outer(params, cfg, s, b, cache["kp"].dtype,
                            cache["conv"].dtype, use_kernel, lengths, store_kv)
@@ -239,7 +282,8 @@ def prefill_paged(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
 
 def decode_step_paged(params: Params, cfg: ModelConfig, token: jnp.ndarray,
                       pos: jnp.ndarray, block: jnp.ndarray, cache: Params, *,
-                      use_kernel: bool = False) -> Tuple[jnp.ndarray, Params]:
+                      use_kernel: bool = False,
+                      write_block=None) -> Tuple[jnp.ndarray, Params]:
     """One decode step for all slots at per-slot positions."""
     h = params["embed"][token]
     sp = params["shared_attn"]
@@ -259,7 +303,7 @@ def decode_step_paged(params: Params, cfg: ModelConfig, token: jnp.ndarray,
             sp["attn"], L.rmsnorm(sp["ln1"], x, cfg.norm_eps), pk, pv,
             block, pos, num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
             head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
-            use_kernel=use_kernel)
+            use_kernel=use_kernel, write_block=write_block)
         x = x + a
         x = x + L.swiglu(sp["mlp"], L.rmsnorm(sp["ln2"], x, cfg.norm_eps))
         return x, (st_g, cw_g, pk, pv)

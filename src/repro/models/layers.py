@@ -304,7 +304,8 @@ def attention_decode_paged(params: Params, x: jnp.ndarray, pool_k: jnp.ndarray,
                            pos: jnp.ndarray, *, num_heads: int, num_kv: int,
                            head_dim: int, rope_theta: float,
                            window: Optional[jnp.ndarray] = None,
-                           use_kernel: bool = False
+                           use_kernel: bool = False,
+                           write_block: Optional[jnp.ndarray] = None
                            ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One-token decode against a PAGED KV pool (one layer's slice of it).
 
@@ -318,7 +319,14 @@ def attention_decode_paged(params: Params, x: jnp.ndarray, pool_k: jnp.ndarray,
     offset ``pos_b % page``; reads gather every slot's pages back through the
     table (or stream them inside the Pallas kernel when ``use_kernel``).
     Masking is positional (``kpos <= pos_b``) so stale page contents are never
-    observable.  Returns (out (B,1,D), pool_k, pool_v).
+    observable.
+
+    ``write_block`` (defaults to ``block``): the table used for the APPEND
+    only.  With prefix sharing, pages aliased by several slots are read-only
+    — admission copy-on-writes any page a slot will append into, and the
+    scheduler masks shared pages to the null page in ``write_block`` so a
+    violated exclusivity invariant drops the write instead of corrupting a
+    co-resident request's cache.  Returns (out (B,1,D), pool_k, pool_v).
     """
     b = x.shape[0]
     page = pool_k.shape[1]
@@ -330,7 +338,8 @@ def attention_decode_paged(params: Params, x: jnp.ndarray, pool_k: jnp.ndarray,
         q = apply_rope(q, pq, rope_theta)
         k = apply_rope(k, pq, rope_theta)
     rows = jnp.arange(b)
-    pg = block[rows, pos // page]            # (B,) physical page of this token
+    wb = block if write_block is None else write_block
+    pg = wb[rows, pos // page]               # (B,) physical page of this token
     off = pos % page
     # duplicate (page 0) targets from idle slots race benignly: the null page
     # is never covered by any slot's positional mask
@@ -365,6 +374,57 @@ def scatter_prefill_pages(pool: jnp.ndarray, seq_kv: jnp.ndarray,
     paged = seq_kv.reshape(a, s // page, page, *seq_kv.shape[2:])
     return pool.at[block_rows[:, : s // page]].set(paged.astype(pool.dtype),
                                                    mode="drop")
+
+
+def suffix_write_rows(block_rows: jnp.ndarray, start: jnp.ndarray,
+                      n_pages: int, page: int) -> jnp.ndarray:
+    """Mask a batch of block-table rows down to the UNCACHED suffix.
+
+    Pages below ``start // page`` belong to the shared prefix (aliased,
+    possibly referenced by other slots or the prefix index) — they are
+    read-only, so their prefill re-writes are redirected to the null page.
+    ``start`` is page-aligned for partial hits and == bucket for full
+    restores (which write nothing).
+    """
+    page_idx = jnp.arange(n_pages)[None, :]
+    return jnp.where(page_idx < (start // page)[:, None], 0,
+                     block_rows[:, :n_pages])
+
+
+def substitute_prefix_kv(pool: jnp.ndarray, inpass: jnp.ndarray,
+                         block_rows: jnp.ndarray, start: jnp.ndarray
+                         ) -> jnp.ndarray:
+    """Splice cached prefix K (or V) under the in-pass suffix values.
+
+    pool: (P, page, Kh, Dh); inpass: (A, S, Kh, Dh); block_rows: (A, n_pages);
+    start: (A,) first uncached position per row.  Positions < start read the
+    slot's aliased pages (bitwise the values the row's own full prefill would
+    have produced — the whole sharing-equivalence argument rests on this);
+    positions >= start keep the in-pass values.  The result feeds the SAME
+    attention as the non-sharing path, so suffix logits and suffix K/V are
+    bitwise identical to a from-scratch prefill.
+    """
+    a, s = inpass.shape[:2]
+    page = pool.shape[1]
+    cached = pool[block_rows[:, : s // page]].reshape(a, s, *inpass.shape[2:])
+    pos = jnp.arange(s)[None, :, None, None]
+    return jnp.where(pos < start[:, None, None, None],
+                     cached.astype(inpass.dtype), inpass)
+
+
+def cow_copy_pages(pool: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray
+                   ) -> jnp.ndarray:
+    """Copy-on-write page duplication: pool[..., dst_i, :] = pool[..., src_i, :].
+
+    pool: (..., P, page, K, Dh) with the page axis at ndim-4; src/dst: (C,)
+    int32 physical page ids, padded with (0, 0) pairs — the null page copied
+    onto itself is a no-op by construction.  Runs at the top of the scheduler
+    tick, BEFORE prefill and decode, so an appending slot always owns a
+    private copy of a retained tail page.
+    """
+    axis = pool.ndim - 4
+    idx = (slice(None),) * axis + (dst,)
+    return pool.at[idx].set(jnp.take(pool, src, axis=axis))
 
 
 # ---------------------------------------------------------------------------

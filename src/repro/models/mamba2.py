@@ -358,17 +358,58 @@ def init_paged_cache(cfg: ModelConfig, num_slots: int, num_pages: int,
     }
 
 
+def init_prefix_cache(cfg: ModelConfig, entries: int, dtype=jnp.bfloat16):
+    """Device-side full-prompt snapshot rows: the recurrent state + conv
+    window at the prompt boundary, keyed host-side by the prompt's chain
+    hash.  The SSM state is constant-size, so one row restores the WHOLE
+    prompt — the recurrent families' equivalent of aliasing every page."""
+    h, p, n = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.ssm_d_inner + 2 * n
+    return {
+        "state": jnp.zeros((cfg.num_layers, entries, h, p, n), jnp.float32),
+        "conv": jnp.zeros((cfg.num_layers, entries, cfg.ssm_conv_width - 1,
+                           conv_dim), dtype),
+    }
+
+
+def snapshot_save(cfg: ModelConfig, cache: Params, prefix: Params,
+                  rows: jnp.ndarray, slots: jnp.ndarray) -> Params:
+    """Snapshot admitted slots' post-prefill state into prefix rows.
+    rows: (A,) snapshot rows (== entries sentinel drops); slots: (A,)."""
+    return dict(prefix,
+                state=prefix["state"].at[:, rows].set(
+                    cache["state"][:, slots], mode="drop"),
+                conv=prefix["conv"].at[:, rows].set(
+                    cache["conv"][:, slots], mode="drop"))
+
+
+def snapshot_restore(cfg: ModelConfig, cache: Params, prefix: Params,
+                     rows: jnp.ndarray, slots: jnp.ndarray) -> Params:
+    """Restore snapshot rows into decode slots (full-prompt prefix hit).
+    slots: (A,) target slots (== num_slots sentinel drops)."""
+    return dict(cache,
+                state=cache["state"].at[:, slots].set(
+                    prefix["state"][:, rows], mode="drop"),
+                conv=cache["conv"].at[:, slots].set(
+                    prefix["conv"][:, rows], mode="drop"))
+
+
 def prefill_paged(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
                   lengths: jnp.ndarray, slots: jnp.ndarray,
                   block_rows: jnp.ndarray, cache: Params, *,
-                  use_kernel: bool = False) -> Tuple[jnp.ndarray, Params]:
+                  use_kernel: bool = False,
+                  start=None) -> Tuple[jnp.ndarray, Params]:
     """Prefill a batch of admitted requests into decode slots ``slots``.
 
     tokens: (A, S_max) right-padded; each row's positions >= lengths[i] are
     exact state no-ops (dt = 0) and its logits are read at lengths[i] - 1.
     Padded admission rows carry an out-of-range slot index and their state
-    writes are dropped."""
-    del block_rows
+    writes are dropped.  ``start`` is accepted for API uniformity but unused:
+    the SSM families have no pages to share mid-prompt — their prefix reuse
+    is the full-prompt snapshot/restore path (state scatter order: a restore
+    following this prefill overwrites the slot, so a restored row may run
+    here as a passive batch member)."""
+    del block_rows, start
     conv_dtype = cache["conv"].dtype
     h = params["embed"][tokens]
 
@@ -393,11 +434,12 @@ def prefill_paged(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
 
 def decode_step_paged(params: Params, cfg: ModelConfig, token: jnp.ndarray,
                       pos: jnp.ndarray, block: jnp.ndarray, cache: Params, *,
-                      use_kernel: bool = False) -> Tuple[jnp.ndarray, Params]:
+                      use_kernel: bool = False,
+                      write_block=None) -> Tuple[jnp.ndarray, Params]:
     """One decode step for all slots.  The recurrent update is position-free,
-    so ``pos``/``block`` are unused — idle slots advance garbage state that
-    admission overwrites."""
-    del pos, block, use_kernel
+    so ``pos``/``block``/``write_block`` are unused — idle slots advance
+    garbage state that admission overwrites."""
+    del pos, block, use_kernel, write_block
     h = params["embed"][token]
 
     def body(carry, xs):

@@ -168,45 +168,128 @@ def init_paged_cache(cfg: ModelConfig, num_slots: int, num_pages: int,
 def prefill_paged(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
                   lengths: jnp.ndarray, slots: jnp.ndarray,
                   block_rows: jnp.ndarray, cache, *,
-                  use_kernel: bool = False):
+                  use_kernel: bool = False, start=None):
     """Admit a BATCH of requests in one pass: tokens (A, S_max) right-padded
     with true lengths (A,), into decode slots ``slots`` (A,) whose
     block-table rows are ``block_rows`` (A, n_pages).  Padded admission rows
     use an out-of-range slot + null-page rows, so their writes drop.
-    Returns (per-row last-prompt-position logits (A, V) fp32, cache)."""
+
+    ``start`` (A,) enables PARTIAL prefill at a page-aligned offset: each
+    row's positions < start[i] are served from its aliased (prefix-shared)
+    pages — the attention families splice the cached K/V under the in-pass
+    values and redirect the prefix page writes to the null page; the
+    recurrent families ignore it (their sharing is the whole-prompt
+    snapshot/restore path).  Returns (per-row last-prompt-position logits
+    (A, V) fp32, cache)."""
     if cfg.family in (DENSE, VLM):
         return transformer.prefill_paged(params, cfg, tokens, lengths, slots,
-                                         block_rows, cache)
+                                         block_rows, cache, start=start)
     if cfg.family == MOE:
         return moe.prefill_paged(params, cfg, tokens, lengths, slots,
-                                 block_rows, cache)
+                                 block_rows, cache, start=start)
     if cfg.family == SSM:
         return mamba2.prefill_paged(params, cfg, tokens, lengths, slots,
-                                    block_rows, cache, use_kernel=use_kernel)
+                                    block_rows, cache, use_kernel=use_kernel,
+                                    start=start)
     if cfg.family == HYBRID:
         return hybrid.prefill_paged(params, cfg, tokens, lengths, slots,
-                                    block_rows, cache, use_kernel=use_kernel)
+                                    block_rows, cache, use_kernel=use_kernel,
+                                    start=start)
     raise ValueError(f"prefill_paged not supported for family {cfg.family!r}")
 
 
 def decode_step_paged(params: Params, cfg: ModelConfig, token: jnp.ndarray,
                       pos: jnp.ndarray, block: jnp.ndarray, cache, *,
-                      use_kernel: bool = False):
+                      use_kernel: bool = False, write_block=None):
     """One decode step for ALL slots.  token (B, 1); pos (B,) per-slot
-    positions; block (B, n_pages) block table.  Returns (logits, cache)."""
+    positions; block (B, n_pages) block table; write_block masks shared
+    (read-only) pages out of the append path.  Returns (logits, cache)."""
     if cfg.family in (DENSE, VLM):
         return transformer.decode_step_paged(params, cfg, token, pos, block,
-                                             cache, use_kernel=use_kernel)
+                                             cache, use_kernel=use_kernel,
+                                             write_block=write_block)
     if cfg.family == MOE:
         return moe.decode_step_paged(params, cfg, token, pos, block, cache,
-                                     use_kernel=use_kernel)
+                                     use_kernel=use_kernel,
+                                     write_block=write_block)
     if cfg.family == SSM:
-        return mamba2.decode_step_paged(params, cfg, token, pos, block, cache)
+        return mamba2.decode_step_paged(params, cfg, token, pos, block, cache,
+                                        write_block=write_block)
     if cfg.family == HYBRID:
         return hybrid.decode_step_paged(params, cfg, token, pos, block, cache,
-                                        use_kernel=use_kernel)
+                                        use_kernel=use_kernel,
+                                        write_block=write_block)
     raise ValueError(
         f"decode_step_paged not supported for family {cfg.family!r}")
+
+
+# ---------------------------------------------------------------------------
+# prefix cache (cross-request prompt reuse)
+# ---------------------------------------------------------------------------
+#
+# The pool's prefix index retains prompt pages by content hash; the DEVICE
+# side keeps a small row cache per tier holding whatever a full-prompt
+# restore needs beyond the pages themselves: the last-prompt-position logits
+# (every family — they seed tok0 + the confidence gate without re-running
+# the admit lane) and the recurrent state + conv window at the prompt
+# boundary (SSM/hybrid).  Rows are host-allocated (LRU) by kv_pool and
+# scattered/gathered inside the one tick program — no extra dispatch, no
+# extra host sync.
+
+
+def init_prefix_cache(cfg: ModelConfig, entries: int, dtype=jnp.bfloat16):
+    """Device-side prefix-cache rows: (E, V) fp32 last-position logits for
+    every family, plus the families' own snapshot extras."""
+    base = {"logits": jnp.zeros((entries, cfg.vocab_size), jnp.float32)}
+    if cfg.family == SSM:
+        base.update(mamba2.init_prefix_cache(cfg, entries, dtype))
+    elif cfg.family == HYBRID:
+        base.update(hybrid.init_prefix_cache(cfg, entries, dtype))
+    elif cfg.family not in PAGED_FAMILIES:
+        raise ValueError(
+            f"prefix cache not supported for family {cfg.family!r}")
+    return base
+
+
+def snapshot_save(cfg: ModelConfig, cache, prefix, rows: jnp.ndarray,
+                  slots: jnp.ndarray):
+    """Scatter admitted slots' post-prefill recurrent state into prefix-cache
+    rows (rows (A,), sentinel == entries drops).  No-op for the attention
+    families — their prompt state IS the retained pages."""
+    if cfg.family == SSM:
+        return mamba2.snapshot_save(cfg, cache, prefix, rows, slots)
+    if cfg.family == HYBRID:
+        return hybrid.snapshot_save(cfg, cache, prefix, rows, slots)
+    return prefix
+
+
+def snapshot_restore(cfg: ModelConfig, cache, prefix, rows: jnp.ndarray,
+                     slots: jnp.ndarray):
+    """Scatter prefix-cache rows into restored decode slots (slots (A,),
+    sentinel == num_slots drops)."""
+    if cfg.family == SSM:
+        return mamba2.snapshot_restore(cfg, cache, prefix, rows, slots)
+    if cfg.family == HYBRID:
+        return hybrid.snapshot_restore(cfg, cache, prefix, rows, slots)
+    return cache
+
+
+def cow_pages(cfg: ModelConfig, cache, src: jnp.ndarray, dst: jnp.ndarray, *,
+              use_kernel: bool = False):
+    """Execute the tick's copy-on-write page duplications: dst pages become
+    copies of src pages in every layer's pool.  Pairs are padded with (0, 0)
+    — the null page copied onto itself.  SSM caches have no pages."""
+    if cfg.family == SSM:
+        return cache
+    if cfg.family not in PAGED_FAMILIES:
+        raise ValueError(f"cow_pages not supported for family {cfg.family!r}")
+    from repro.models import layers as L
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return dict(cache, kp=kops.copy_pages(cache["kp"], src, dst),
+                    vp=kops.copy_pages(cache["vp"], src, dst))
+    return dict(cache, kp=L.cow_copy_pages(cache["kp"], src, dst),
+                vp=L.cow_copy_pages(cache["vp"], src, dst))
 
 
 def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray, cache, *,

@@ -342,16 +342,27 @@ def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
 
 
 def _prefill_body(cfg: ModelConfig, s: int, b: int, kv_dtype,
-                  capacity_factor: float):
+                  capacity_factor: float, block_rows=None, start=None):
     """The per-layer prefill scan body shared by :func:`prefill` (contiguous
     cache) and :func:`prefill_paged` (page pool).  Emits (k, v) per layer for
-    the caller to store."""
+    the caller to store.
+
+    With ``block_rows``/``start`` (prefix sharing) the scan also carries the
+    layer's page pool and splices cached-prefix K/V under the in-pass values
+    (see ``layers.substitute_prefix_kv``); routed-expert dispatch still runs
+    over every position — the batch composition, and therefore the capacity
+    drops, stay identical to the non-sharing pass."""
     hd = cfg.resolved_head_dim
     win = jnp.asarray(s, jnp.int32)
     pos = jnp.arange(s)
     mask = L.causal_window_mask(s, s, window=win)
+    prefix = start is not None
 
-    def body(carry, lp):
+    def body(carry, xs):
+        if prefix:
+            lp, pk, pv = xs
+        else:
+            lp = xs
         x = act.shard_hidden(carry)
         xq = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
         q, k, v = L._qkv(lp["attn"], xq, cfg.num_heads, cfg.num_kv_heads, hd)
@@ -360,6 +371,9 @@ def _prefill_body(cfg: ModelConfig, s: int, b: int, kv_dtype,
             k = L.apply_rope(k, pos, cfg.rope_theta)
         k = k.astype(kv_dtype)
         v = v.astype(kv_dtype)
+        if prefix:
+            k = L.substitute_prefix_kv(pk, k, block_rows, start)
+            v = L.substitute_prefix_kv(pv, v, block_rows, start)
         a = L._sdpa(q, k, v, mask)
         x = x + a.reshape(b, s, cfg.num_heads * hd) @ lp["attn"]["wo"]
         xn = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
@@ -383,36 +397,49 @@ def init_paged_cache(cfg: ModelConfig, num_slots: int, num_pages: int,
 def prefill_paged(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
                   lengths: jnp.ndarray, slots: jnp.ndarray,
                   block_rows: jnp.ndarray, cache: Params, *,
-                  capacity_factor: float = 2.0) -> Tuple[jnp.ndarray, Params]:
+                  capacity_factor: float = 2.0,
+                  start=None) -> Tuple[jnp.ndarray, Params]:
     """Paged batched admission prefill (see transformer.prefill_paged).
 
     Routed dispatch runs over all padded (A, S_max) token rows together; the
     padded tails do consume expert capacity, so keep ``capacity_factor``
     generous (the decode-path default) — drops on the tails cannot corrupt
     real positions, but drops caused BY the tails could.
+
+    ``start`` (prefix sharing): cached positions read their K/V from the
+    aliased pages and skip the page writes; NOTE the routed dispatch remains
+    batch-coupled, so unlike the dense families a page's content can depend
+    on which rows were co-admitted when it was first filled (capacity drops)
+    — reuse is exact only up to routing-drop determinism.
     """
     del slots
     h = params["embed"][tokens]
     b, s, _ = h.shape
-    body = _prefill_body(cfg, s, b, cache["kp"].dtype, capacity_factor)
-    h, (ks, vs) = lax.scan(body, h, params["layers"])
+    page = cache["kp"].shape[2]
+    npg = s // page
+    if start is None:
+        body = _prefill_body(cfg, s, b, cache["kp"].dtype, capacity_factor)
+        h, (ks, vs) = lax.scan(body, h, params["layers"])
+        wrows = block_rows[:, :npg]
+    else:
+        body = _prefill_body(cfg, s, b, cache["kp"].dtype, capacity_factor,
+                             block_rows, start)
+        h, (ks, vs) = lax.scan(body, h, (params["layers"],
+                                         cache["kp"], cache["vp"]))
+        wrows = L.suffix_write_rows(block_rows, start, npg, page)
     h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
     h = jnp.take_along_axis(h, (lengths - 1)[:, None, None], axis=1)
     logits = (h[:, 0, :] @ params["lm_head"]).astype(jnp.float32)
-    page = cache["kp"].shape[2]
-    npg = s // page
     shape = ks.shape[:1] + (b, npg, page) + ks.shape[3:]
-    new_k = cache["kp"].at[:, block_rows[:, :npg]].set(
-        ks.reshape(shape), mode="drop")
-    new_v = cache["vp"].at[:, block_rows[:, :npg]].set(
-        vs.reshape(shape), mode="drop")
+    new_k = cache["kp"].at[:, wrows].set(ks.reshape(shape), mode="drop")
+    new_v = cache["vp"].at[:, wrows].set(vs.reshape(shape), mode="drop")
     return logits, {"kp": new_k, "vp": new_v}
 
 
 def decode_step_paged(params: Params, cfg: ModelConfig, token: jnp.ndarray,
                       pos: jnp.ndarray, block: jnp.ndarray, cache: Params, *,
-                      capacity_factor: float = 2.0, use_kernel: bool = False
-                      ) -> Tuple[jnp.ndarray, Params]:
+                      capacity_factor: float = 2.0, use_kernel: bool = False,
+                      write_block=None) -> Tuple[jnp.ndarray, Params]:
     """One decode step for all slots at per-slot positions (paged pool)."""
     h = params["embed"][token]
     page = cache["kp"].shape[2]
@@ -426,7 +453,7 @@ def decode_step_paged(params: Params, cfg: ModelConfig, token: jnp.ndarray,
             lp["attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), pk, pv,
             block, pos, num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
             head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
-            window=win, use_kernel=use_kernel)
+            window=win, use_kernel=use_kernel, write_block=write_block)
         x = x + a
         xn = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
         y, _ = moe_ffn_auto(lp, cfg, xn, capacity_factor)

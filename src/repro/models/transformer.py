@@ -276,16 +276,27 @@ def decode_step_split(params: Params, cfg: ModelConfig, token: jnp.ndarray,
     return logits, new_cache
 
 
-def _prefill_body(cfg: ModelConfig, s: int, b: int, kv_dtype):
+def _prefill_body(cfg: ModelConfig, s: int, b: int, kv_dtype,
+                  block_rows=None, start=None):
     """The per-layer prefill scan body shared by :func:`prefill` (contiguous
     cache) and :func:`prefill_paged` (page pool): K/V are rounded to the
     cache dtype *before* the in-pass attention so logits and cache match the
     token-by-token decode path exactly, and long sequences take the
     query-chunked attention path.  Emits (k, v) per layer for the caller to
-    store."""
+    store.
+
+    With ``block_rows``/``start`` (prefix sharing) the scan also carries the
+    layer's page pool and splices cached-prefix K/V under the in-pass values
+    (``layers.substitute_prefix_kv``) — the spliced tensor holds bitwise the
+    values a from-scratch prefill would compute, so suffix K/V and
+    last-position logits are bitwise identical to the non-sharing path."""
+    prefix = start is not None
 
     def body(carry, xs):
-        lp, win = xs
+        if prefix:
+            lp, win, pk, pv = xs
+        else:
+            lp, win = xs
         x = carry
         xn = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
         q, k, v = L._qkv(lp["attn"], xn, cfg.num_heads, cfg.num_kv_heads,
@@ -296,6 +307,9 @@ def _prefill_body(cfg: ModelConfig, s: int, b: int, kv_dtype):
             k = L.apply_rope(k, pos, cfg.rope_theta)
         k = k.astype(kv_dtype)
         v = v.astype(kv_dtype)
+        if prefix:
+            k = L.substitute_prefix_kv(pk, k, block_rows, start)
+            v = L.substitute_prefix_kv(pv, v, block_rows, start)
         qc = 512 if (s > 512 and s % 512 == 0) else s
         if s > qc:
             a = L.chunked_attention(q, k, v, q_chunk=qc, causal=True, window=win)
@@ -332,7 +346,8 @@ def init_paged_cache(cfg: ModelConfig, num_slots: int, num_pages: int,
 
 def prefill_paged(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
                   lengths: jnp.ndarray, slots: jnp.ndarray,
-                  block_rows: jnp.ndarray, cache: Params
+                  block_rows: jnp.ndarray, cache: Params, *,
+                  start: Optional[jnp.ndarray] = None
                   ) -> Tuple[jnp.ndarray, Params]:
     """Prefill a batch of admitted requests (each padded to the fixed max
     bucket) into their pages in ONE pass.
@@ -346,6 +361,13 @@ def prefill_paged(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
     scheduler at ONE compiled executable across every prompt bucket, and the
     A-way batching is what amortises admission cost like the drain path does.
 
+    ``start`` (prefix sharing): per-row first UNCACHED position.  Cached
+    positions' K/V are read from the aliased pages (``substitute_prefix_kv``)
+    and their page writes are redirected to the null page
+    (``suffix_write_rows``) — the shared prefix is read-only; only the
+    suffix is prefilled.  With ``start=None`` the graph is exactly the
+    non-sharing one.
+
     The layer math is EXACTLY :func:`prefill`'s (shared ``_prefill_body``);
     only the cache write (page scatter vs contiguous) and the logits
     position differ.  Returns (logits (A, V) fp32, cache).
@@ -354,28 +376,37 @@ def prefill_paged(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
     h = params["embed"][tokens]
     b, s, _ = h.shape
     windows = layer_windows(cfg, s)
-    body = _prefill_body(cfg, s, b, cache["kp"].dtype)
-    h, (ks, vs) = lax.scan(body, h, (params["layers"], windows))
+    page = cache["kp"].shape[2]
+    npg = s // page
+    if start is None:
+        body = _prefill_body(cfg, s, b, cache["kp"].dtype)
+        h, (ks, vs) = lax.scan(body, h, (params["layers"], windows))
+        wrows = block_rows[:, :npg]
+    else:
+        body = _prefill_body(cfg, s, b, cache["kp"].dtype, block_rows, start)
+        h, (ks, vs) = lax.scan(body, h, (params["layers"], windows,
+                                         cache["kp"], cache["vp"]))
+        wrows = L.suffix_write_rows(block_rows, start, npg, page)
     h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
     h = jnp.take_along_axis(h, (lengths - 1)[:, None, None], axis=1)
     logits = (h[:, 0, :] @ params["lm_head"]).astype(jnp.float32)
     # ks: (L, A, S, K, Dh) -> every layer's pages in one scatter
-    page = cache["kp"].shape[2]
-    npg = s // page
     shape = ks.shape[:1] + (b, npg, page) + ks.shape[3:]
-    new_k = cache["kp"].at[:, block_rows[:, :npg]].set(
-        ks.reshape(shape), mode="drop")
-    new_v = cache["vp"].at[:, block_rows[:, :npg]].set(
-        vs.reshape(shape), mode="drop")
+    new_k = cache["kp"].at[:, wrows].set(ks.reshape(shape), mode="drop")
+    new_v = cache["vp"].at[:, wrows].set(vs.reshape(shape), mode="drop")
     return logits, {"kp": new_k, "vp": new_v}
 
 
 def decode_step_paged(params: Params, cfg: ModelConfig, token: jnp.ndarray,
                       pos: jnp.ndarray, block: jnp.ndarray, cache: Params, *,
-                      use_kernel: bool = False) -> Tuple[jnp.ndarray, Params]:
+                      use_kernel: bool = False,
+                      write_block: Optional[jnp.ndarray] = None
+                      ) -> Tuple[jnp.ndarray, Params]:
     """One decode step for ALL slots at per-slot positions.
 
-    token: (B, 1); pos: (B,) int32; block: (B, n_pages) int32.
+    token: (B, 1); pos: (B,) int32; block: (B, n_pages) int32; write_block:
+    the append-side table with shared (read-only) pages masked to the null
+    page — see ``layers.attention_decode_paged``.
     Returns (logits (B, V) fp32, cache)."""
     h = params["embed"][token]
     page = cache["kp"].shape[2]
@@ -389,7 +420,7 @@ def decode_step_paged(params: Params, cfg: ModelConfig, token: jnp.ndarray,
             lp["attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), pk, pv,
             block, pos, num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
             head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
-            window=win, use_kernel=use_kernel)
+            window=win, use_kernel=use_kernel, write_block=write_block)
         x = x + a
         m = L.swiglu(lp["mlp"], L.rmsnorm(lp["ln2"], x, cfg.norm_eps))
         return x + m, (pk, pv)

@@ -14,6 +14,8 @@ Two consumers:
 """
 from __future__ import annotations
 
+import hashlib
+import time
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence, Tuple
 
@@ -27,6 +29,8 @@ class Request:
     max_new_tokens: int = 16
     temperature: float = 0.0            # <= 0 -> greedy
     eos_id: Optional[int] = None        # early stop (continuous path only)
+    latency_budget: Optional[float] = None  # seconds; expired S->L escalations
+    #                                       are dropped (the S answer stands)
 
 
 @dataclass
@@ -103,10 +107,49 @@ class Batcher:
 
 @dataclass
 class AdmittedRequest:
-    """One request, bucketized and ready for a decode slot."""
+    """One request, bucketized and ready for a decode slot.
+
+    ``page_hashes`` / ``full_hash`` are the prompt's content addresses in the
+    KV pool's prefix index — computed ONCE here at submit (the prompt never
+    changes) and reused by every tier the request visits, including the S→L
+    escalation replay (the hashes key each tier's own index).
+    """
     request: Request
     tokens: np.ndarray                  # (bucket,) right-padded to its bucket
     bucket: int                         # padded prompt length (= prefill pos)
+    page_hashes: Optional[Tuple[bytes, ...]] = None  # rolling chain, per page
+    full_hash: Optional[bytes] = None   # chain extended over the partial tail
+    submit_time: float = 0.0            # monotonic; drives the drop policy
+
+
+def _chain(prev: bytes, chunk: np.ndarray) -> bytes:
+    h = hashlib.blake2b(digest_size=16)
+    h.update(prev)
+    h.update(np.ascontiguousarray(chunk, np.int32).tobytes())
+    return h.digest()
+
+
+def prompt_hashes(tokens: np.ndarray, page_size: int
+                  ) -> Tuple[Tuple[bytes, ...], bytes]:
+    """Rolling chain hash of a padded prompt at page granularity.
+
+    ``h_i = H(h_{i-1} || tokens[i*page:(i+1)*page])`` — a chain hash keys the
+    WHOLE prefix ending at page i, so a flat hash->page dict behaves as a
+    prefix trie: walking a new prompt's chain until the first miss yields its
+    longest cached prefix.  The full-prompt key extends the chain over the
+    partial tail page (or a length-domain separator when the prompt is
+    page-aligned, so it can never collide with a page key).
+    """
+    n_full = len(tokens) // page_size
+    prev = b"hi-prefix-v1"
+    hashes = []
+    for i in range(n_full):
+        prev = _chain(prev, tokens[i * page_size:(i + 1) * page_size])
+        hashes.append(prev)
+    tail = tokens[n_full * page_size:]
+    full = _chain(prev, tail if len(tail)
+                  else np.asarray([-1], np.int32))
+    return tuple(hashes), full
 
 
 class AdmissionQueue:
@@ -115,13 +158,15 @@ class AdmissionQueue:
     Requests are validated + bucketized at ``submit`` (same ``pad_to_bucket``
     ladder as the drain path, so the two paths see IDENTICAL padded prompts —
     the token-equivalence guarantee depends on this) and popped one at a time
-    as slots free up.
+    as slots free up.  When ``page_size`` is set, submit also content-hashes
+    the padded prompt for the pool's prefix index.
     """
 
     def __init__(self, buckets: Sequence[int] = (32, 64, 128),
-                 pad_id: int = 0):
+                 pad_id: int = 0, page_size: Optional[int] = None):
         self.buckets = tuple(sorted(buckets))
         self.pad_id = pad_id
+        self.page_size = page_size
         self._queue: List[AdmittedRequest] = []
         self.submitted = 0
 
@@ -129,7 +174,11 @@ class AdmissionQueue:
         bucket = pad_to_bucket(len(req.prompt), self.buckets)   # raises if too long
         tokens = np.full((bucket,), self.pad_id, np.int32)
         tokens[: len(req.prompt)] = req.prompt
-        self._queue.append(AdmittedRequest(req, tokens, bucket))
+        hashes = full = None
+        if self.page_size:
+            hashes, full = prompt_hashes(tokens, self.page_size)
+        self._queue.append(AdmittedRequest(req, tokens, bucket, hashes, full,
+                                           time.monotonic()))
         self.submitted += 1
 
     def pop(self) -> Optional[AdmittedRequest]:

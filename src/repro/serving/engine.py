@@ -33,21 +33,34 @@ the ``serving/scheduler.py`` + ``serving/kv_pool.py`` subsystem:
 
 * cache   = ONE donated page-pool allocation per tier
   (``model_zoo.init_paged_cache``), indexed by an int32 block table — the
-  bucket disappears from every device shape;
+  bucket disappears from every device shape.  Pages are REFCOUNTED and
+  content-addressed: a rolling chain hash per page of prompt tokens indexes
+  every previously-served prompt prefix, admission aliases the longest hit
+  read-only into the new slot's block row, and a small donated prefix cache
+  (``model_zoo.init_prefix_cache``) keeps last-position logits + recurrent
+  state rows so a FULL-prompt repeat restores without any prefill compute;
 * tick    = ONE dispatch of ONE AOT-compiled program for ALL buckets:
-  batched admission prefill for up to ``admit_width`` queued requests
-  (``lax.cond``, skipped at runtime when nothing is admitted) +
+  copy-on-write page duplications (an appending slot never writes a shared
+  page), batched admission prefill of ONLY the uncached suffixes for up to
+  ``admit_width`` queued requests (``lax.cond``, skipped at runtime when
+  nothing is admitted — or when every admission is a full-prefix restore) +
   ``decode_block`` fused decode steps for every slot of BOTH tiers at
   per-slot positions (idle tiers skip the decode the same way);
 * sync    = exactly one ``_host_fetch`` per tick (the drain discipline at
   tick granularity);
 * admission = ``batcher.AdmissionQueue`` feeds a slot the moment a sequence
-  finishes (EOS / per-request max-new-tokens) or escalates S→L.
+  finishes (EOS / per-request max-new-tokens) or escalates S→L; the L queue
+  drops escalations past their per-request ``latency_budget``
+  (arXiv:2112.11413 — the S answer stands, counted in ``stats['dropped']``).
 
 So the dispatch-count model becomes: ``serve()`` = 1 program per
 (batch, bucket); ``serve_stream()`` = 1 program per TICK, 1 compiled shape
-TOTAL, with greedy outputs token-identical to ``serve()`` on the same
-bucketized traffic (asserted by tests/test_scheduler.py).
+TOTAL (prefix sharing adds only runtime operands, never a shape), with
+greedy outputs token-identical to ``serve()`` on the same bucketized traffic
+— sharing on or off (asserted by tests/test_scheduler.py and
+tests/test_prefix_cache.py).  Because the L tier's pool and index persist
+across escalations, a re-escalated prompt skips the L prefill entirely —
+the HI analogue of not redoing work the S tier already paid for.
 
 ``benchmarks/bench_serving.py`` measures this path against the legacy
 token-by-token loop (kept below as :func:`_decode_loop` + ``serve_legacy``)
@@ -225,7 +238,7 @@ class HIEngine:
         self.stats: Dict[str, float] = {
             "requests": 0, "offloaded": 0, "dropped": 0,
             "serve_time": 0.0, "compiles": 0, "stream_compiles": 0,
-            "stream_ticks": 0}
+            "stream_ticks": 0, "prefill_tokens_saved": 0}
 
     # -- executable cache ---------------------------------------------------
 
@@ -361,7 +374,8 @@ class HIEngine:
 
     def serve_stream(self, requests, *, buckets=(32, 64), num_slots: int = 8,
                      l_slots: int = None, page_size: int = 16,
-                     admit_width: int = None, decode_block: int = 4
+                     admit_width: int = None, decode_block: int = 4,
+                     prefix_sharing: bool = True, prefix_entries: int = None
                      ) -> Dict[int, Dict[str, np.ndarray]]:
         """Continuous-batching entry point: serve ``requests`` (an iterable of
         ``batcher.Request``) through slot-level admission over the paged KV
@@ -376,35 +390,56 @@ class HIEngine:
         ONE executable serves every bucket (``stats['stream_compiles']``
         stays at 1).
 
+        ``prefix_sharing`` (default on) enables the pools' content-addressed
+        prefix reuse: prompts are chain-hashed at submit, admission aliases
+        the longest cached prefix (refcounted, copy-on-write) and prefills
+        only the uncached suffix; a repeated prompt — including an S→L
+        escalation replay — restores pages + state + logits without running
+        the admit lane.  The scheduler (and its pools and indexes) persists
+        across ``serve_stream`` calls with the same configuration, so reuse
+        is cross-call.  ``stats['prefill_tokens_saved']`` counts the skipped
+        prompt positions; outputs stay token-identical to sharing-off.
+        Requests carrying a ``latency_budget`` are dropped from the L queue
+        once past their deadline (``stats['dropped']``, record flag
+        ``dropped`` — the S answer stands).
+
         Returns per-request result records keyed by request_id.
         """
         from repro.serving.batcher import AdmissionQueue
         from repro.serving.scheduler import ContinuousScheduler
 
         key = (tuple(sorted(buckets)), num_slots, l_slots, page_size,
-               admit_width, decode_block)
+               admit_width, decode_block, prefix_sharing, prefix_entries)
         if self._stream is None or self._stream[0] != key:
             sched = ContinuousScheduler(
                 self.s, self.l, self.hi, max_prompt_len=max(buckets),
                 max_new_tokens=self.max_new_tokens, num_slots=num_slots,
                 l_slots=l_slots, page_size=page_size,
                 admit_width=admit_width, decode_block=decode_block,
-                use_kernel=self.use_kernel, temperature=self.temperature)
+                use_kernel=self.use_kernel, temperature=self.temperature,
+                prefix_sharing=prefix_sharing,
+                prefix_entries=prefix_entries)
             self._stream = (key, sched)
             self.stats["stream_compiles"] += sched.stats["compiles"]
         sched = self._stream[1]
         sched.set_default_temperature(self.temperature)
-        queue = AdmissionQueue(buckets=buckets)
+        queue = AdmissionQueue(buckets=buckets,
+                               page_size=page_size if prefix_sharing else None)
         for r in requests:
             queue.submit(r)
         theta = (self.online_policy.theta if self.online_policy is not None
                  else self.hi.theta)
         ticks0, time0 = sched.stats["ticks"], sched.stats["serve_time"]
+        saved0 = sched.prefix_stats.get("tokens_saved", 0)
         results = sched.run(queue, theta=theta)
         self.stats["requests"] += sched.stats["requests"]
         sched.stats["requests"] = 0
         self.stats["offloaded"] += sched.stats["offloaded"]
         sched.stats["offloaded"] = 0
+        self.stats["dropped"] += sched.stats["dropped"]
+        sched.stats["dropped"] = 0
+        self.stats["prefill_tokens_saved"] += \
+            sched.prefix_stats.get("tokens_saved", 0) - saved0
         self.stats["stream_ticks"] += sched.stats["ticks"] - ticks0
         self.stats["serve_time"] += sched.stats["serve_time"] - time0
         return results

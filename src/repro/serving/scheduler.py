@@ -9,11 +9,13 @@ online-HI line of work, arXiv:2304.00891, for the per-sample admission model):
 
 * Each tier owns ``num_slots`` decode slots backed by ONE :class:`KVPool`.
 * Every scheduler *tick* is ONE device dispatch of one AOT-compiled program —
-  the SAME program regardless of prompt bucket — that, per tier, (a) admits
-  up to ``admit_width`` queued requests in one batched (A, S_max) prefill
-  into their pages (``lax.cond``: skipped at runtime when nothing is
-  admitted), and (b) runs ``decode_block`` fused decode steps for ALL slots
-  at per-slot positions (a ``lax.scan``, like the drain path's fused decode).
+  the SAME program regardless of prompt bucket — that, per tier, (a) executes
+  the admission plan's copy-on-write page duplications, (b) admits up to
+  ``admit_width`` queued requests in one batched (A, S_max) prefill into
+  their pages (``lax.cond``: skipped at runtime when every admission is a
+  full-prefix RESTORE — the prefix cache's throughput win), and (c) runs
+  ``decode_block`` fused decode steps for ALL slots at per-slot positions
+  (a ``lax.scan``, like the drain path's fused decode).
 * Host sync happens exactly once per tick, post-cascade, through the
   engine's ``_host_fetch`` — the drain path's single-sync discipline at tick
   granularity.
@@ -23,12 +25,38 @@ online-HI line of work, arXiv:2304.00891, for the per-sample admission model):
   is final.  Decode steps a released slot computed past its request's end
   are discarded on the host (bounded by ``decode_block - 1``).
 
+Prefix sharing (``prefix_entries > 0``) changes admission, not decode: the
+pool aliases the longest content-hash-matched prefix of each prompt into the
+new slot's block row (refcount bump, read-only), the admit lane prefills
+ONLY the uncached suffix (``prefill_paged(..., start)``), and a FULL-prompt
+hit restores everything — pages, recurrent state, and last-position logits —
+from the device-side prefix cache without touching the admit lane at all.
+An admission that must append into a retained partial tail page gets a
+copy-on-write duplicate (scheduled in the same tick's program), and the
+decode write path takes a ``write_block`` table with shared pages masked to
+the null page.  The L tier keeps its own pool and index, so repeated S→L
+escalations of the same prompt skip the L prefill entirely.
+
+The L-tier admission queue additionally enforces the time-constrained
+offloading drop policy (Fresa & Champati, arXiv:2112.11413): an escalation
+whose request has outlived its ``latency_budget`` is dropped — the S-tier
+answer stands, ``stats["dropped"]`` counts it, and the result record is
+flagged.
+
 Outputs are TOKEN-IDENTICAL to the drain path on the same bucketized
-prompts, for ANY ``admit_width``/``decode_block``: admission prefill reads
-each row's logits at ``length - 1`` of the same padded prompt, decode masks
-by position, and sampling keys are per-request + per-token-index — none of
-it depends on which slot, tick, or co-resident requests the sequence ran
-with.  ``tests/test_scheduler.py`` asserts this end to end.
+prompts, for ANY ``admit_width``/``decode_block``, with prefix sharing ON or
+OFF: admission prefill reads each row's logits at ``length - 1`` of the same
+padded prompt (a suffix prefill splices the cached K/V — bitwise the values
+its own full pass would compute — under the in-pass projections; a restore
+replays logits the original admission computed), decode masks by position,
+and sampling keys are per-request + per-token-index — none of it depends on
+which slot, tick, or co-resident requests the sequence ran with.  One
+caveat: MoE routed dispatch is batch-coupled (capacity drops depend on
+co-admitted rows), so MoE prefix reuse is exact only up to routing-drop
+determinism — with the generous decode-path ``capacity_factor`` drops are
+absent on this reference and the equivalence tests hold; see
+``moe.prefill_paged``.  ``tests/test_scheduler.py`` and
+``tests/test_prefix_cache.py`` assert this end to end.
 """
 from __future__ import annotations
 
@@ -48,13 +76,13 @@ from repro.core.confidence import confidence as _confidence
 from repro.models import model_zoo
 from repro.serving import sampler
 from repro.serving.batcher import AdmissionQueue, AdmittedRequest
-from repro.serving.kv_pool import KVPool
+from repro.serving.kv_pool import AdmitPlan, KVPool
 
 
 def _tier_tick_fn(cfg: ModelConfig, metric: str, use_kernel: bool,
-                  decode_block: int):
-    """Device-side per-tier tick: batched cond-prefill + K fused decode
-    steps for all slots."""
+                  decode_block: int, sharing: bool):
+    """Device-side per-tier tick: COW copies + batched cond-prefill +
+    prefix-cache save/restore + K fused decode steps for all slots."""
 
     def conf_of(logits, theta):
         if use_kernel:
@@ -63,18 +91,55 @@ def _tier_tick_fn(cfg: ModelConfig, metric: str, use_kernel: bool,
         return _confidence(logits, metric)
 
     def tick(params, theta, tin, pool):
+        core = pool["core"]
         a = tin["admit_tokens"].shape[0]
 
-        def admit(pool):
+        if sharing:
+            # copy-on-write duplications first: prefill reads and decode
+            # appends must see the private copies.  Skipped at runtime on the
+            # (common) no-COW tick — the kernel path in particular streams
+            # the whole page pool, which would tax every steady-state tick.
+            core = jax.lax.cond(
+                tin["any_cow"],
+                lambda c: model_zoo.cow_pages(cfg, c, tin["cow_src"],
+                                              tin["cow_dst"],
+                                              use_kernel=use_kernel),
+                lambda c: c, core)
+
+        def admit(core):
             return model_zoo.prefill_paged(
                 params, cfg, tin["admit_tokens"], tin["admit_len"],
-                tin["admit_slot"], tin["admit_blocks"], pool,
-                use_kernel=use_kernel)
+                tin["admit_slot"], tin["admit_blocks"], core,
+                use_kernel=use_kernel,
+                start=tin["admit_start"] if sharing else None)
 
-        def skip(pool):
-            return jnp.zeros((a, cfg.vocab_size), jnp.float32), pool
+        def skip(core):
+            return jnp.zeros((a, cfg.vocab_size), jnp.float32), core
 
-        logits0, pool = jax.lax.cond(tin["any_admit"], admit, skip, pool)
+        # skipped when nothing is admitted — or (sharing) when every
+        # admission this tick is a full-prefix restore
+        logits0, core = jax.lax.cond(tin["any_prefill"], admit, skip, core)
+        if sharing:
+            prefix = pool["prefix"]
+            # full restores read their admission logits + recurrent state
+            # from the PRE-SAVE prefix cache: a restore's entry was filled in
+            # an earlier tick, and reading before this tick's saves keeps a
+            # same-tick eviction that recycles the restore's row (LRU under
+            # row pressure) from corrupting the restored state
+            logits0 = jnp.where(tin["restore_mask"][:, None],
+                                prefix["logits"][tin["restore_row"]], logits0)
+            core = model_zoo.snapshot_restore(cfg, core, prefix,
+                                              tin["restore_row"],
+                                              tin["restore_slot"])
+            # computing admissions persist their logits + recurrent state
+            # into their reserved rows (sentinel rows drop); computing slots
+            # are disjoint from restored slots, so the gather below is
+            # unaffected by the restore scatter above
+            prefix = dict(prefix, logits=prefix["logits"].at[
+                tin["save_row"]].set(logits0, mode="drop"))
+            prefix = model_zoo.snapshot_save(cfg, core, prefix,
+                                             tin["save_row"],
+                                             tin["admit_slot"])
         conf0 = conf_of(logits0, theta)                          # (A,)
         keys0 = sampler.request_keys(tin["admit_seed"], 0)
         tok0 = sampler.sample(keys0, logits0, tin["admit_temp"])  # (A,)
@@ -83,32 +148,35 @@ def _tier_tick_fn(cfg: ModelConfig, metric: str, use_kernel: bool,
         # padded admission rows carry an out-of-range slot -> dropped
         last0 = tin["last_tok"].at[tin["admit_slot"]].set(tok0, mode="drop")
         block = tin["block"]
+        wblock = tin["wblock"] if sharing else None
         b = block.shape[0]
 
         def body(carry, k):
-            last, pool = carry
-            logits, pool = model_zoo.decode_step_paged(
-                params, cfg, last[:, None], tin["pos"] + k, block, pool,
-                use_kernel=use_kernel)
+            last, core = carry
+            logits, core = model_zoo.decode_step_paged(
+                params, cfg, last[:, None], tin["pos"] + k, block, core,
+                use_kernel=use_kernel, write_block=wblock)
             confs_k = conf_of(logits, theta)
             keys = sampler.request_keys(tin["seeds"], tin["tok_idx"] + k)
             toks_k = sampler.sample(keys, logits, tin["temps"])
-            return (toks_k, pool), (toks_k, confs_k)
+            return (toks_k, core), (toks_k, confs_k)
 
-        def decode(pool):
-            (_, pool), (toks, confs) = jax.lax.scan(body, (last0, pool),
+        def decode(core):
+            (_, core), (toks, confs) = jax.lax.scan(body, (last0, core),
                                                     jnp.arange(decode_block))
-            return toks, confs, pool
+            return toks, confs, core
 
-        def idle(pool):
+        def idle(core):
             # this tier has no live slots this tick (e.g. the L tier before
             # the first escalation arrives): skip the decode entirely
             return (jnp.zeros((decode_block, b), jnp.int32),
-                    jnp.zeros((decode_block, b), jnp.float32), pool)
+                    jnp.zeros((decode_block, b), jnp.float32), core)
 
-        toks, confs, pool = jax.lax.cond(tin["any_live"], decode, idle, pool)
+        toks, confs, core = jax.lax.cond(tin["any_live"], decode, idle, core)
+        out_pool = {"core": core, "prefix": prefix} if sharing \
+            else {"core": core}
         return {"admit_tok": tok0, "admit_conf": conf0,
-                "toks": toks, "confs": confs}, pool          # toks (K, B)
+                "toks": toks, "confs": confs}, out_pool     # toks (K, B)
 
     return tick
 
@@ -140,8 +208,19 @@ class _TierRuntime:
     """Host-side slot state for one tier (numpy mirrors of tick operands)."""
 
     def __init__(self, cfg: ModelConfig, num_slots: int, max_context: int,
-                 page_size: int, admit_width: int, dtype):
-        self.pool = KVPool(cfg, num_slots, max_context, page_size, dtype=dtype)
+                 page_size: int, admit_width: int, dtype,
+                 prefix_entries: int = 0, max_prompt_len: int = 0,
+                 num_pages: Optional[int] = None):
+        if num_pages is None:
+            # sharing headroom: beyond every slot's full context, enough
+            # pages to RETAIN prefix_entries full prompts without evicting
+            # under load
+            num_pages = num_slots * (max_context // page_size) + 1
+            num_pages += prefix_entries * (-(-max_prompt_len // page_size))
+        self.pool = KVPool(cfg, num_slots, max_context, page_size,
+                           num_pages=num_pages, dtype=dtype,
+                           prefix_entries=prefix_entries)
+        self.sharing = prefix_entries > 0
         self.num_slots = num_slots
         self.admit_width = admit_width
         self.default_temp = 0.0      # engine-level fallback (Request wins)
@@ -152,6 +231,7 @@ class _TierRuntime:
         self.tok_idx = np.zeros((num_slots,), np.int32)
         self.temps = np.zeros((num_slots,), np.float32)
         self.admitted: List[int] = []    # slots admitted THIS tick, row order
+        self.plans: List[AdmitPlan] = []  # aligned admission plans
 
     @property
     def busy(self) -> int:
@@ -163,15 +243,27 @@ class _TierRuntime:
                 return i
         return None
 
-    def admit(self, adm: AdmittedRequest, steps: int, decode_block: int
-              ) -> bool:
-        """Claim a slot + pages for ``adm``; False if no capacity this tick."""
+    def admit(self, adm: AdmittedRequest, steps: int, decode_block: int,
+              tick: int) -> bool:
+        """Claim a slot + pages for ``adm``; False if no capacity this tick.
+        With sharing, the pool aliases the longest cached prefix and the
+        returned plan carries start / restore / save / COW decisions."""
         slot = self.free_slot()
         # decode writes reach bucket + steps - 2, plus <= K-1 overrun steps
         context = adm.bucket + max(steps - 1, 1) + (decode_block - 1)
-        if slot is None or not self.pool.can_alloc(context):
+        if slot is None:
             return False
-        self.pool.alloc(slot, context)
+        if self.sharing:
+            plan = self.pool.admit_prefix(slot, context, adm.bucket,
+                                          adm.page_hashes, adm.full_hash,
+                                          tick)
+            if plan is None:
+                return False
+        else:
+            if not self.pool.can_alloc(context):
+                return False
+            self.pool.alloc(slot, context)
+            plan = AdmitPlan(slot=slot)
         self.slot_req[slot] = _Active(adm, steps)
         self.pos[slot] = adm.bucket
         self.seeds[slot] = adm.request.request_id
@@ -181,6 +273,7 @@ class _TierRuntime:
                             else self.default_temp)
         self.last_tok[slot] = 0                # replaced on-device by tok0
         self.admitted.append(slot)
+        self.plans.append(plan)
         return True
 
     def release(self, slot: int) -> _Active:
@@ -209,14 +302,13 @@ class _TierRuntime:
             blocks[row] = self.pool.block[slot]
             seeds[row] = self.seeds[slot]
             temps[row] = self.temps[slot]
-        return {
+        out = {
             "last_tok": jnp.asarray(self.last_tok),
             "pos": jnp.asarray(self.pos),
             "block": jnp.asarray(self.pool.block),
             "seeds": jnp.asarray(self.seeds),
             "tok_idx": jnp.asarray(self.tok_idx),
             "temps": jnp.asarray(self.temps),
-            "any_admit": jnp.asarray(bool(self.admitted)),
             "any_live": jnp.asarray(self.busy > 0),
             "admit_tokens": jnp.asarray(tokens),
             "admit_len": jnp.asarray(lens),
@@ -225,6 +317,54 @@ class _TierRuntime:
             "admit_seed": jnp.asarray(seeds),
             "admit_temp": jnp.asarray(temps),
         }
+        if not self.sharing:
+            out["any_prefill"] = jnp.asarray(bool(self.admitted))
+            return out
+        entries = self.pool.prefix_entries
+        starts = np.zeros((a,), np.int32)
+        restore_mask = np.zeros((a,), bool)
+        restore_row = np.zeros((a,), np.int32)
+        restore_slot = np.full((a,), self.num_slots, np.int32)
+        save_row = np.full((a,), entries, np.int32)        # drop sentinel
+        cow_src = np.zeros((a,), np.int32)
+        cow_dst = np.zeros((a,), np.int32)
+        any_prefill = False
+        for row, (slot, plan) in enumerate(zip(self.admitted, self.plans)):
+            starts[row] = plan.start
+            if plan.is_restore:
+                restore_mask[row] = True
+                restore_row[row] = plan.restore_row
+                restore_slot[row] = slot
+            else:
+                any_prefill = True
+                if plan.save_row >= 0:
+                    save_row[row] = plan.save_row
+            if plan.cow is not None:
+                cow_src[row], cow_dst[row] = plan.cow
+        out.update({
+            "any_prefill": jnp.asarray(any_prefill),
+            "any_cow": jnp.asarray(bool(cow_dst.any())),
+            "admit_start": jnp.asarray(starts),
+            "restore_mask": jnp.asarray(restore_mask),
+            "restore_row": jnp.asarray(restore_row),
+            "restore_slot": jnp.asarray(restore_slot),
+            "save_row": jnp.asarray(save_row),
+            "cow_src": jnp.asarray(cow_src),
+            "cow_dst": jnp.asarray(cow_dst),
+            "wblock": jnp.asarray(self.pool.write_block()),
+        })
+        return out
+
+    def pool_operand(self) -> Dict:
+        if self.sharing:
+            return {"core": self.pool.buffers,
+                    "prefix": self.pool.prefix_buffers}
+        return {"core": self.pool.buffers}
+
+    def store_pool(self, pool: Dict) -> None:
+        self.pool.buffers = pool["core"]
+        if self.sharing:
+            self.pool.prefix_buffers = pool["prefix"]
 
 
 class ContinuousScheduler:
@@ -232,11 +372,14 @@ class ContinuousScheduler:
 
     One instance = one AOT-compiled tick executable (``stats['compiles']``
     stays at 1 no matter how many prompt buckets flow through — the paged
-    pool removed the bucket from every device shape).  ``admit_width``
-    batches admission prefills like the drain path batches prompts;
-    ``decode_block`` fuses that many decode steps per tick like the drain
-    path's decode scan (host-discarded overrun past a request's end is the
-    latency/throughput knob).
+    pool removed the bucket from every device shape, and prefix sharing adds
+    only runtime operands).  ``admit_width`` batches admission prefills like
+    the drain path batches prompts; ``decode_block`` fuses that many decode
+    steps per tick like the drain path's decode scan (host-discarded overrun
+    past a request's end is the latency/throughput knob).
+    ``prefix_sharing`` turns on the pool's content-addressed prefix reuse
+    (``prefix_entries`` full-prompt rows per tier, default 2x the tier's
+    slots).
     """
 
     def __init__(self, s_tier, l_tier, hi: HIConfig, *, max_prompt_len: int,
@@ -244,7 +387,9 @@ class ContinuousScheduler:
                  l_slots: Optional[int] = None, page_size: int = 16,
                  admit_width: Optional[int] = None, decode_block: int = 4,
                  use_kernel: bool = False, temperature: float = 0.0,
-                 cache_dtype=jnp.bfloat16):
+                 cache_dtype=jnp.bfloat16, prefix_sharing: bool = False,
+                 prefix_entries: Optional[int] = None,
+                 num_pages: Optional[int] = None):
         if max_prompt_len % page_size:
             raise ValueError(f"max_prompt_len {max_prompt_len} must be a "
                              f"multiple of page_size {page_size}")
@@ -254,24 +399,35 @@ class ContinuousScheduler:
         self.max_prompt_len = max_prompt_len
         self.max_new_tokens = max_new_tokens
         self.decode_block = max(1, decode_block)
+        self.prefix_sharing = prefix_sharing
         l_slots = l_slots if l_slots is not None else max(2, num_slots // 2)
         admit_width = admit_width if admit_width is not None else num_slots
         page = page_size
         raw_ctx = max_prompt_len + max_new_tokens + self.decode_block - 1
         max_context = -(-raw_ctx // page) * page
+        s_entries = (prefix_entries if prefix_entries is not None
+                     else 2 * num_slots) if prefix_sharing else 0
+        l_entries = (prefix_entries if prefix_entries is not None
+                     else 2 * l_slots) if prefix_sharing else 0
         self.srt = _TierRuntime(s_tier.cfg, num_slots, max_context, page,
-                                admit_width, cache_dtype)
+                                admit_width, cache_dtype,
+                                prefix_entries=s_entries,
+                                max_prompt_len=max_prompt_len,
+                                num_pages=num_pages)
         self.lrt = _TierRuntime(l_tier.cfg, l_slots, max_context, page,
-                                min(admit_width, l_slots), cache_dtype)
+                                min(admit_width, l_slots), cache_dtype,
+                                prefix_entries=l_entries,
+                                max_prompt_len=max_prompt_len,
+                                num_pages=num_pages)
         self.set_default_temperature(temperature)
         self.stats: Dict[str, float] = {
-            "requests": 0, "offloaded": 0, "ticks": 0, "compiles": 0,
-            "serve_time": 0.0}
+            "requests": 0, "offloaded": 0, "dropped": 0, "ticks": 0,
+            "compiles": 0, "serve_time": 0.0}
 
         s_tick = _tier_tick_fn(s_tier.cfg, hi.metric, use_kernel,
-                               self.decode_block)
+                               self.decode_block, self.srt.sharing)
         l_tick = _tier_tick_fn(l_tier.cfg, hi.metric, use_kernel,
-                               self.decode_block)
+                               self.decode_block, self.lrt.sharing)
 
         def tick(s_params, l_params, theta, s_in, l_in, s_pool, l_pool):
             s_out, s_pool = s_tick(s_params, theta, s_in, s_pool)
@@ -288,8 +444,8 @@ class ContinuousScheduler:
                 spec(self.s.params), spec(self.l.params),
                 jax.ShapeDtypeStruct((), jnp.float32),
                 spec(s_in0), spec(l_in0),
-                spec(self.srt.pool.buffers),
-                spec(self.lrt.pool.buffers)).compile()
+                spec(self.srt.pool_operand()),
+                spec(self.lrt.pool_operand())).compile()
         self.stats["compiles"] += 1
 
     def set_default_temperature(self, temperature: float) -> None:
@@ -299,13 +455,23 @@ class ContinuousScheduler:
         self.srt.default_temp = float(temperature)
         self.lrt.default_temp = float(temperature)
 
+    @property
+    def prefix_stats(self) -> Dict[str, int]:
+        """Cumulative prefix-cache counters summed over both tiers: hits /
+        full_hits / tokens_saved / cow_copies / evictions."""
+        agg: Dict[str, int] = {}
+        for rt in (self.srt, self.lrt):
+            for k, v in rt.pool.stats.items():
+                agg[k] = agg.get(k, 0) + v
+        return agg
+
     # -- host loop ----------------------------------------------------------
 
     def run(self, queue: AdmissionQueue, *, theta: Optional[float] = None
             ) -> Dict[int, Dict[str, Any]]:
         """Drain ``queue`` through the slots; returns per-request records
         keyed by request_id: tokens / s_tokens / confidence / offloaded /
-        served_remote (mirroring ``HIEngine.serve``'s fields)."""
+        served_remote / dropped (mirroring ``HIEngine.serve``'s fields)."""
         from repro.serving import engine as engine_mod   # _host_fetch hook
 
         theta = float(self.hi.theta if theta is None else theta)
@@ -316,9 +482,12 @@ class ContinuousScheduler:
 
         while len(queue) or l_queue or self.srt.busy or self.lrt.busy:
             self._try_admit(self.srt, queue)
+            self._drop_expired(l_queue, results)
             self._try_admit(self.lrt, l_queue)
             if (not self.srt.admitted and not self.lrt.admitted
                     and not self.srt.busy and not self.lrt.busy):
+                if not len(queue) and not l_queue:
+                    break               # everything left was dropped
                 raise RuntimeError(
                     "scheduler stalled: pool too small to admit a single "
                     "request — raise num_pages / num_slots")
@@ -326,10 +495,12 @@ class ContinuousScheduler:
             l_in = self.lrt.tick_inputs(self.max_prompt_len)
             with warnings.catch_warnings():
                 warnings.filterwarnings("ignore", message=".*[Dd]onat")
-                out, self.srt.pool.buffers, self.lrt.pool.buffers = \
+                out, s_pool, l_pool = \
                     self._exec(self.s.params, self.l.params, theta_j,
-                               s_in, l_in, self.srt.pool.buffers,
-                               self.lrt.pool.buffers)
+                               s_in, l_in, self.srt.pool_operand(),
+                               self.lrt.pool_operand())
+            self.srt.store_pool(s_pool)
+            self.lrt.store_pool(l_pool)
             host = engine_mod._host_fetch(out)   # the tick's single sync
             self.stats["ticks"] += 1
             self._absorb(self.srt, host["s"],
@@ -348,14 +519,36 @@ class ContinuousScheduler:
         ``queue`` is the AdmissionQueue (S tier) or the escalation deque
         (L tier); both speak the same popleft/appendleft head interface."""
         rt.admitted = []
+        rt.plans = []
+        tick = int(self.stats["ticks"])
         while len(rt.admitted) < rt.admit_width and len(queue):
             if rt.free_slot() is None:
                 break
             adm = queue.popleft()
             steps = min(adm.request.max_new_tokens, self.max_new_tokens)
-            if not rt.admit(adm, steps, self.decode_block):
+            if not rt.admit(adm, steps, self.decode_block, tick):
                 queue.appendleft(adm)   # no pages this tick: retry next tick
                 break
+
+    def _drop_expired(self, l_queue: deque, results: Dict) -> None:
+        """arXiv:2112.11413 drop policy: an escalation whose request has
+        outlived its latency budget is dropped from the L queue — the S-tier
+        answer (already recorded) stands, flagged ``dropped``."""
+        if not l_queue:
+            return
+        now = time.monotonic()
+        kept: List[AdmittedRequest] = []
+        while l_queue:
+            adm = l_queue.popleft()
+            budget = adm.request.latency_budget
+            if budget is not None and now - adm.submit_time > budget:
+                self.stats["dropped"] += 1
+                rec = results.get(adm.request.request_id)
+                if rec is not None:
+                    rec["dropped"] = True
+            else:
+                kept.append(adm)
+        l_queue.extend(kept)
 
     def _absorb(self, rt: _TierRuntime, out: Dict[str, np.ndarray],
                 finish) -> None:
@@ -386,6 +579,7 @@ class ContinuousScheduler:
             "confidence": conf,
             "offloaded": conf < theta,
             "served_remote": False,
+            "dropped": False,
         }
         if conf < theta:
             self.stats["offloaded"] += 1

@@ -56,6 +56,144 @@ def test_exhaustion_and_misuse_raise(cfg):
         pool.alloc(0, 999)
 
 
+def test_free_hardening(cfg):
+    """Double frees, frees of never-allocated slots, and out-of-range slots
+    raise clear errors instead of corrupting the free list; a manually
+    corrupted refcount is caught as a foreign free rather than silently
+    double-freeing the page."""
+    pool = KVPool(cfg, num_slots=3, max_context=32, page_size=8)
+    pool.alloc(0, 32)
+    pool.free(0)
+    with pytest.raises(ValueError, match="[Dd]ouble free"):
+        pool.free(0)
+    with pytest.raises(ValueError, match="holds no pages"):
+        pool.free(1)                               # never allocated
+    with pytest.raises(ValueError, match="out of range"):
+        pool.free(7)
+    with pytest.raises(ValueError, match="out of range"):
+        pool.alloc(-1, 8)
+    pool.alloc(2, 16)
+    pool._refs[pool.owned(2)[0]] = 0               # simulate corruption
+    with pytest.raises(ValueError, match="foreign free"):
+        pool.free(2)
+
+
+def test_refcount_conservation_invariant(cfg):
+    """check_invariants enforces refcount conservation: every page's
+    refcount equals its slot references + index retentions, and live + free
+    pages partition the pool."""
+    pool = KVPool(cfg, num_slots=2, max_context=32, page_size=8)
+    pool.alloc(0, 24)
+    pool.alloc(1, 16)
+    pool.check_invariants()
+    # simulate a leaked reference
+    pool._refs[pool.owned(0)[0]] += 1
+    with pytest.raises(AssertionError, match="refcount conservation"):
+        pool.check_invariants()
+    pool._refs[pool.owned(0)[0]] -= 1
+    pool.check_invariants()
+    # simulate a page that is free AND owned
+    pool._free.append(pool.owned(1)[0])
+    with pytest.raises(AssertionError):
+        pool.check_invariants()
+
+
+def test_prefix_admission_aliases_and_refcounts(cfg):
+    """admit_prefix: a repeated prompt aliases the retained pages (refcount
+    bumps, no fresh allocation for the prefix), a shared-prefix prompt gets a
+    partial hit, and frees return pages only when the last reference drops."""
+    from repro.serving.batcher import prompt_hashes
+    pool = KVPool(cfg, num_slots=2, max_context=32, page_size=8,
+                  num_pages=24, prefix_entries=2)
+    rng = np.random.default_rng(0)
+    t1 = rng.integers(0, cfg.vocab_size, 24).astype(np.int32)
+    t2 = np.concatenate([t1[:16], rng.integers(0, cfg.vocab_size, 8)
+                         .astype(np.int32)])
+    h1, f1 = prompt_hashes(t1, 8)
+    h2, f2 = prompt_hashes(t2, 8)
+
+    plan1 = pool.admit_prefix(0, 28, 24, h1, f1, tick=0)
+    assert plan1.start == 0 and plan1.save_row >= 0
+    pool.check_invariants()
+    prompt_pages = pool.owned(0)[:3]
+
+    # identical prompt, later tick -> full restore aliasing every prompt page
+    plan2 = pool.admit_prefix(1, 28, 24, h1, f1, tick=1)
+    assert plan2.is_restore and plan2.start == 24
+    assert pool.owned(1)[:3] == prompt_pages       # aliased, not copied
+    assert (pool._refs[prompt_pages] >= 3).all()   # slot+slot+index refs
+    pool.check_invariants()
+
+    pool.free(1)
+    assert set(pool.owned(0)) >= set(prompt_pages)  # survivor keeps pages
+    pool.check_invariants()
+
+    pool.free(0)
+    # index retention keeps the prompt pages out of the free list
+    assert not (set(prompt_pages) & set(pool._free))
+    pool.check_invariants()
+
+    # shared 2-page prefix, different tail -> partial hit at start=16
+    plan3 = pool.admit_prefix(0, 28, 24, h2, f2, tick=2)
+    assert not plan3.is_restore and plan3.start == 16
+    assert pool.owned(0)[:2] == prompt_pages[:2]
+    pool.check_invariants()
+
+
+def test_failed_eviction_preserves_index(cfg):
+    """When every pool page is held by live slots, a failed admission must
+    NOT wipe the prefix index: evicting entries whose pages are all
+    slot-referenced frees nothing, so they are kept for when the slots
+    drain."""
+    from repro.serving.batcher import prompt_hashes
+    pool = KVPool(cfg, num_slots=2, max_context=32, page_size=8,
+                  num_pages=5, prefix_entries=2)    # null + 4 usable
+    rng = np.random.default_rng(2)
+    t1 = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+    t2 = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+    h1, f1 = prompt_hashes(t1, 8)
+    h2, f2 = prompt_hashes(t2, 8)
+    pool.admit_prefix(0, 32, 32, h1, f1, tick=0)    # slot 0 holds ALL pages
+    idx_before = len(pool._page_index)
+    full_before = len(pool._full_index)
+    assert pool.admit_prefix(1, 32, 32, h2, f2, tick=1) is None  # no pages
+    assert len(pool._page_index) == idx_before      # retention intact
+    assert len(pool._full_index) == full_before
+    pool.check_invariants()
+    pool.free(0)
+    # with the slot drained the retained prompt still full-restores
+    plan = pool.admit_prefix(1, 32, 32, h1, f1, tick=2)
+    assert plan.is_restore
+    pool.check_invariants()
+
+
+def test_prefix_eviction_reclaims_index_pages(cfg):
+    """When the free list runs dry, LRU index entries are evicted to satisfy
+    admission; pages still referenced by live slots survive eviction."""
+    from repro.serving.batcher import prompt_hashes
+    pool = KVPool(cfg, num_slots=2, max_context=64, page_size=8,
+                  num_pages=9, prefix_entries=2)   # null + 8 usable
+    rng = np.random.default_rng(1)
+    t1 = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+    t2 = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+    h1, f1 = prompt_hashes(t1, 8)
+    h2, f2 = prompt_hashes(t2, 8)
+    pool.admit_prefix(0, 32, 32, h1, f1, tick=0)   # 4 pages + retention
+    pool.free(0)
+    pool.check_invariants()
+    assert pool.free_pages == 4                    # 4 retained by the index
+    # a different prompt needs 8 pages -> evicts t1's retained entries
+    plan = pool.admit_prefix(0, 64, 32, h2, f2, tick=1)
+    assert plan is not None and plan.start == 0
+    assert pool.stats["evictions"] > 0
+    pool.check_invariants()
+    # t1's entries are gone: admitting it again is a miss
+    pool.free(0)
+    plan = pool.admit_prefix(1, 32, 32, h1, f1, tick=2)
+    assert not plan.is_restore
+    pool.check_invariants()
+
+
 def test_slot_reuse_recycles_pages(cfg):
     """Freed pages are reusable and the new owner's block row never aliases
     a live slot's pages (the allocator half of the no-leakage guarantee —
