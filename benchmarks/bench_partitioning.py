@@ -7,12 +7,9 @@ measures our L-CNN's actual per-layer CPU time for the analogous analysis.
 import time
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import emit
-from repro.core.baselines import (IMAGE_COMM_MS, LAYER_COMM_MS, ES_LAYER_MS,
-                                  PI_LAYER_MS, T_OFFLOAD_MS,
-                                  partition_per_sample_ms)
+from repro.core.baselines import T_OFFLOAD_MS, partition_per_sample_ms
 from repro.models import cnn
 
 

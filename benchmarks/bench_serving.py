@@ -24,8 +24,24 @@ escalation against the L tier's own index), served with sharing ON vs OFF
 at a calibrated ~40% offload rate.  Steady state (warm index) is what's
 timed — the regime a production front-end with a fixed system prompt lives
 in — and the prefill tokens saved per pass are reported alongside req/s.
-Results land in ``BENCH_serving.json`` so the perf trajectory is tracked
-PR-over-PR.
+
+The LONG-PROMPT scenario measures chunked prefill admission: mixed traffic
+where a quarter of the prompts are ~16x longer than the rest, served with
+``chunk_prefill`` ON vs OFF.  With chunking on, long prompts stream through
+the chunk lane C tokens per tick (interleaved with decode) and the batched
+admit lane shrinks to one chunk's width — time-to-first-token p50/p99 across
+the whole trace is what's reported, plus req/s.
+
+The SPECULATIVE scenario measures the fused S→L draft-verify cascade on the
+calibrated ~25%-offload mixed trace: req/s speculative ON vs OFF, the draft
+acceptance rate, and the escalated-block fraction.  NOTE the reference
+models are random-init, so the S tier's drafts rarely match the L tier's
+choices (the measured ~12% acceptance is the structural floor: the agreed
+prefix of an escalated block).  Speculation's win scales with acceptance —
+i.e. with how well S approximates L on real checkpoints — so this scenario
+is primarily the acceptance-rate instrument; req/s on random weights is the
+worst case (every block pays draft + verify).  Results land in
+``BENCH_serving.json`` so the perf trajectory is tracked PR-over-PR.
 
   PYTHONPATH=src python -m benchmarks.bench_serving [--out BENCH_serving.json]
   PYTHONPATH=src python -m benchmarks.bench_serving --smoke   # CI tier-1
@@ -237,6 +253,109 @@ def _bench_repeated_prefix(cfg, n: int, iters: int):
     }
 
 
+# long-prompt scenario: most traffic is short with heterogeneous output
+# lengths (slots free at staggered ticks, so admission pressure is
+# continuous), a quarter of prompts is ~16x longer — the admission-monopoly
+# regime chunked prefill exists for: without chunking EVERY admission tick
+# pays an (A, 512) prefill pass (shapes are static, shorts pad up) and a
+# long admission stalls all decode for its duration
+LONG_BUCKETS = (32, 512)
+LONG_CHUNK = 128
+LONG_CHUNK_WIDTH = 4
+LONG_MAX_NEW = 16
+LONG_DECODE_BLOCK = 3
+
+
+def _long_prompt_requests(cfg, n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(384, 512)) if i % 4 == 0 \
+            else int(rng.integers(8, 32))
+        reqs.append(Request(i, rng.integers(
+            0, cfg.vocab_size, plen).astype(np.int32),
+            max_new_tokens=int(rng.integers(2, LONG_MAX_NEW))))
+    return [reqs[i] for i in rng.permutation(n)]
+
+
+def _bench_long_prompt(cfg, n: int, iters: int):
+    """TTFT p50/p99 + req/s with chunked prefill admission on vs off."""
+    reqs = _long_prompt_requests(cfg, n)
+    hi = HIConfig(theta=0.0, capacity_factor=1.0)   # S-only: isolate prefill
+
+    def measure(chunked: bool):
+        eng = build_engine(cfg, hi, max_new_tokens=LONG_MAX_NEW,
+                           cache_len=LONG_BUCKETS[-1] + 16)
+        kw = dict(buckets=LONG_BUCKETS, num_slots=NUM_SLOTS,
+                  l_slots=NUM_SLOTS // 2, page_size=PAGE_SIZE,
+                  decode_block=LONG_DECODE_BLOCK, prefix_sharing=False,
+                  chunk_prefill=chunked, chunk_size=LONG_CHUNK,
+                  chunk_width=LONG_CHUNK_WIDTH)
+        eng.serve_stream(reqs, **kw)               # warm the tick executable
+        best, ttfts = None, None
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            out = eng.serve_stream(reqs, **kw)
+            dt = time.perf_counter() - t0
+            if best is None or dt < best:
+                best = dt
+                ttfts = np.asarray([out[r.request_id]["ttft"] for r in reqs])
+        return best, ttfts
+
+    t_off, ttft_off = measure(False)
+    t_on, ttft_on = measure(True)
+    return {
+        "requests": n,
+        "buckets": list(LONG_BUCKETS),
+        "chunk_size": LONG_CHUNK,
+        "chunk_width": LONG_CHUNK_WIDTH,
+        "long_fraction": 0.25,
+        "chunked_rps": n / t_on,
+        "unchunked_rps": n / t_off,
+        "chunked_speedup": t_off / t_on,
+        "ttft_p50_ms": {"chunked": float(np.percentile(ttft_on, 50) * 1e3),
+                        "unchunked": float(np.percentile(ttft_off, 50) * 1e3)},
+        "ttft_p99_ms": {"chunked": float(np.percentile(ttft_on, 99) * 1e3),
+                        "unchunked": float(np.percentile(ttft_off, 99) * 1e3)},
+    }
+
+
+def _bench_speculative(cfg, reqs, theta: float, iters: int):
+    """Fused draft-verify cascade vs the plain scheduler on the calibrated
+    mixed trace: req/s, draft acceptance rate, escalated-block fraction."""
+    hi = HIConfig(theta=theta, capacity_factor=1.0)
+    k = MAX_NEW - 1
+
+    def measure(spec: bool):
+        eng = build_engine(cfg, hi, max_new_tokens=MAX_NEW,
+                           cache_len=CACHE_LEN)
+        kw = dict(buckets=STREAM_BUCKETS, num_slots=NUM_SLOTS,
+                  l_slots=None if spec else NUM_SLOTS // 2,
+                  page_size=PAGE_SIZE, decode_block=k, speculative=spec)
+        eng.serve_stream(reqs, **kw)
+        times = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            eng.serve_stream(reqs, **kw)
+            times.append(time.perf_counter() - t0)
+        return min(times), eng._stream[1].stats
+
+    t_off, _ = measure(False)
+    t_on, stats = measure(True)
+    return {
+        "requests": len(reqs),
+        "buckets": list(STREAM_BUCKETS),
+        "draft_block": k,
+        "theta_calibrated": theta,
+        "speculative_rps": len(reqs) / t_on,
+        "non_speculative_rps": len(reqs) / t_off,
+        "speculative_speedup": t_off / t_on,
+        "draft_accept_rate": stats["accepted"] / max(stats["drafted"], 1),
+        "escalated_block_frac": stats["escalated_blocks"]
+        / max(stats["blocks"], 1),
+    }
+
+
 def _calibrate_theta(eng, reqs, quantile: float = 0.25) -> float:
     """Paper §4 theta* calibration, serving-style: probe the S-tier's
     confidence distribution on the actual traffic through ``eng`` (theta is
@@ -330,6 +449,12 @@ def run(out_path: str = "BENCH_serving.json", smoke: bool = False) -> dict:
     # -- repeated-prefix traffic: prefix-sharing pool on vs off -------------
     repeated = _bench_repeated_prefix(cfg, REQUESTS, iters)
 
+    # -- long-prompt admission: chunked prefill on vs off -------------------
+    long_prompt = _bench_long_prompt(cfg, REQUESTS, iters)
+
+    # -- fused speculative S->L cascade vs plain scheduling -----------------
+    speculative = _bench_speculative(cfg, reqs, theta, iters)
+
     result = {
         "arch": ARCH,
         "requests": REQUESTS,
@@ -362,6 +487,8 @@ def run(out_path: str = "BENCH_serving.json", smoke: bool = False) -> dict:
             "stream_ticks": int(eng_stream.stats["stream_ticks"]),
         },
         "repeated_prefix": repeated,
+        "long_prompt": long_prompt,
+        "speculative": speculative,
         "smoke": smoke,
         "backend": jax.default_backend(),
     }
@@ -387,6 +514,20 @@ def run(out_path: str = "BENCH_serving.json", smoke: bool = False) -> dict:
          f"{r['no_sharing_rps']:.1f} without: {r['sharing_speedup']:.2f}x, "
          f"{r['prefill_tokens_saved_per_pass']}/{r['prompt_tokens_per_pass']}"
          f" prefill tokens saved/pass")
+    lp = long_prompt
+    emit("serving_chunked_prefill", 0.0,
+         f"TTFT p50 {lp['ttft_p50_ms']['chunked']:.0f}ms chunked vs "
+         f"{lp['ttft_p50_ms']['unchunked']:.0f}ms whole-prompt (p99 "
+         f"{lp['ttft_p99_ms']['chunked']:.0f} vs "
+         f"{lp['ttft_p99_ms']['unchunked']:.0f}ms); "
+         f"{lp['chunked_rps']:.1f} vs {lp['unchunked_rps']:.1f} req/s")
+    sp = speculative
+    emit("serving_speculative", 0.0,
+         f"{sp['speculative_rps']:.1f} req/s fused draft-verify vs "
+         f"{sp['non_speculative_rps']:.1f} plain "
+         f"({sp['speculative_speedup']:.2f}x); accept rate "
+         f"{sp['draft_accept_rate']:.2f}, escalated-block frac "
+         f"{sp['escalated_block_frac']:.2f}")
     return result
 
 

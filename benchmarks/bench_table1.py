@@ -5,8 +5,6 @@ one jit program) per-batch latency, and derives the paper's exact Table-1
 cost accounting from the replay module.
 """
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, time_us
 from repro.configs.base import HIConfig

@@ -1,6 +1,5 @@
 """Paper Table 3: the binary relevance-filter cascade (dog breeds)."""
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import emit, time_us
 from repro.configs.base import HIConfig

@@ -12,7 +12,6 @@ Reproduces, on the CWRU-statistics-matched synthetic dataset:
 
   PYTHONPATH=src python examples/fault_detection.py
 """
-import numpy as np
 
 from repro.data import vibration as vib
 from repro.models import cnn

@@ -5,11 +5,9 @@ through the static-capacity router, and prints the paper's cost accounting.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import HIConfig
 from repro.core.calibrate import brute_force_theta
 from repro.core.cost import cost_closed_form
 from repro.core.router import capacity_for, route

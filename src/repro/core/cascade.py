@@ -13,8 +13,7 @@ IS the ED→ES offload link and its collective bytes are the paper's beta.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp

@@ -10,10 +10,9 @@ reproduces the paper's per-image accounting exactly.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict
 
 import jax.numpy as jnp
-import numpy as np
 
 
 def per_sample_cost(offloaded: jnp.ndarray, s_correct: jnp.ndarray,

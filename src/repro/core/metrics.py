@@ -1,7 +1,7 @@
 """Accounting: turn cascade outputs + ground truth into the paper's tables."""
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Optional
 
 import numpy as np
 

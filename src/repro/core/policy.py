@@ -14,8 +14,7 @@
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Optional
+from dataclasses import dataclass
 
 import jax.numpy as jnp
 import numpy as np

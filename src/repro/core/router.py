@@ -12,7 +12,7 @@ link is the gather collective across the mesh.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

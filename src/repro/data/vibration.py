@@ -10,8 +10,7 @@ each other so only the CNN can separate *which* fault it is.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, Tuple
+from typing import Tuple
 
 import numpy as np
 

@@ -22,7 +22,6 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -178,6 +177,102 @@ def copy_pages_pallas(pool: jnp.ndarray, src_of: jnp.ndarray, *,
         out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
         interpret=interpret,
     )(src_of, pool)
+
+
+def _chunk_paged_kernel(blk_ref, q_ref, k_ref, v_ref, mask_ref,
+                        acc_ref, m_ref, l_ref, *, scale: float):
+    """Multi-token generalisation of ``_paged_kernel``: a query BLOCK of C
+    tokens per slot (per-slot start positions are already folded into the
+    validity mask, which carries the intra-chunk causal structure).  The
+    online-softmax state gains a leading C axis; everything else — scalar-
+    prefetched block table, page DMA via the index_map, output revisiting
+    over the sequential last grid dim — is the single-token kernel's
+    discipline."""
+    del blk_ref      # consumed by the index_maps, not the body
+    q = q_ref[0, 0].astype(jnp.float32)           # (C, G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)        # (page, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    valid = mask_ref[0, :, 0] > 0                 # (C, page)
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    scores = jnp.einsum("cgd,sd->cgs", q, k) * scale       # (C, G, page)
+    scores = jnp.where(valid[:, None, :], scores, _NEG)
+
+    m_prev = m_ref[0, 0]                          # (C, G)
+    l_prev = l_ref[0, 0]
+    acc_prev = acc_ref[0, 0]                      # (C, G, D)
+
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+    p = jnp.exp(scores - m_new[..., None]) \
+        * valid[:, None, :].astype(jnp.float32)
+    corr = jnp.exp(m_prev - m_new)
+
+    m_ref[0, 0] = m_new
+    l_ref[0, 0] = l_prev * corr + jnp.sum(p, axis=-1)
+    acc_ref[0, 0] = acc_prev * corr[..., None] + \
+        jnp.einsum("cgs,sd->cgd", p, v)
+
+
+def decode_attention_chunk_paged_pallas(q: jnp.ndarray, pool_k: jnp.ndarray,
+                                        pool_v: jnp.ndarray,
+                                        block: jnp.ndarray,
+                                        valid: jnp.ndarray, *,
+                                        interpret: bool = True) -> jnp.ndarray:
+    """q: (B, C, H, D) — a chunk of C query tokens per slot; pool_k/v:
+    (P, page, K, D); block: (B, n_pages) int32; valid: (B, C, n_pages * page)
+    bool — per-slot positional AND intra-chunk causal mask (query i of slot b
+    may attend key position s iff ``valid[b, i, s]``).
+
+    One grid step DMAs physical page ``block[b, j]`` (scalar-prefetched) and
+    accumulates it into all C queries' online-softmax states at once — the
+    chunk costs ONE streaming pass over the slot's pages instead of C.
+    Returns (B, C, H, D) attention output (fp32 accumulation)."""
+    b, c, h, d = q.shape
+    page, kh = pool_k.shape[1], pool_k.shape[2]
+    npg = block.shape[1]
+    g = h // kh
+    qg = q.reshape(b, c, kh, g, d).transpose(0, 2, 1, 3, 4)  # (B, KH, C, G, D)
+    mask = valid.astype(jnp.int32).reshape(b, c, npg, page)
+
+    kernel = functools.partial(_chunk_paged_kernel, scale=1.0 / math.sqrt(d))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kh, npg),
+        in_specs=[
+            pl.BlockSpec((1, 1, c, g, d),
+                         lambda bi, ki, si, blk: (bi, ki, 0, 0, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda bi, ki, si, blk: (blk[bi, si], 0, ki, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda bi, ki, si, blk: (blk[bi, si], 0, ki, 0)),
+            pl.BlockSpec((1, c, 1, page),
+                         lambda bi, ki, si, blk: (bi, 0, si, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, c, g, d),
+                         lambda bi, ki, si, blk: (bi, ki, 0, 0, 0)),
+            pl.BlockSpec((1, 1, c, g), lambda bi, ki, si, blk: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, 1, c, g), lambda bi, ki, si, blk: (bi, ki, 0, 0)),
+        ],
+    )
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kh, c, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, kh, c, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, kh, c, g), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block, qg, pool_k, pool_v, mask)
+
+    out = acc / jnp.maximum(l, 1e-30)[..., None]            # (B, KH, C, G, D)
+    return out.transpose(0, 2, 1, 3, 4).reshape(b, c, h, d).astype(q.dtype)
 
 
 def decode_attention_paged_pallas(q: jnp.ndarray, pool_k: jnp.ndarray,

@@ -55,6 +55,20 @@ def decode_attention_paged(q: jnp.ndarray, pool_k: jnp.ndarray,
 
 
 @jax.jit
+def decode_attention_chunk_paged(q: jnp.ndarray, pool_k: jnp.ndarray,
+                                 pool_v: jnp.ndarray, block: jnp.ndarray,
+                                 valid: jnp.ndarray) -> jnp.ndarray:
+    """Flash CHUNK attention over a paged KV pool: C query tokens per slot at
+    per-slot start positions in one streaming pass over the slot's pages.
+
+    q: (B, C, H, D); pool_k/v: (P, page, K, D); block: (B, n_pages) int32
+    (scalar-prefetched); valid: (B, C, n_pages * page) positional +
+    intra-chunk causal mask."""
+    return _da.decode_attention_chunk_paged_pallas(q, pool_k, pool_v, block,
+                                                   valid, interpret=INTERPRET)
+
+
+@jax.jit
 def copy_pages(pool: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray
                ) -> jnp.ndarray:
     """Copy-on-write page duplication: pool pages ``dst`` become copies of

@@ -20,8 +20,6 @@ materialise for the WHOLE sequence at once — the kernel bounds it to one tile.
 """
 from __future__ import annotations
 
-import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

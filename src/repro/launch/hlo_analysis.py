@@ -11,8 +11,8 @@ HLO text by summing operand sizes of all-gather / all-reduce / reduce-scatter
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict
 
 # TPU v5e per-chip constants (assignment-specified)
 PEAK_FLOPS = 197e12          # bf16 FLOP/s

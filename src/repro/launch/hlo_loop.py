@@ -22,7 +22,7 @@ this:
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 _DTYPE_BYTES = {
@@ -205,14 +205,7 @@ def stablehlo_flops(text: str) -> FlopCount:
 
     # propagate through the (acyclic) call graph to fixed point
     for _ in range(len(funcs) + 2):
-        changed = False
-        for name, (_, _, edges) in local.items():
-            for callee, w in edges.items():
-                if callee not in mult:
-                    continue
-                contrib = mult[name] * w
-                # accumulate across distinct callers: recompute from scratch
-        # full recompute pass
+        # accumulate across distinct callers: full recompute pass each round
         new_mult = {name: 0.0 for name in funcs}
         if "main" in new_mult:
             new_mult["main"] = 1.0

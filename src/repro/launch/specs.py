@@ -2,8 +2,7 @@
 (architecture x input shape x mesh) dry-run case.  Zero device allocation."""
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -13,8 +13,8 @@ All are pure-JAX (lax.conv_general_dilated, NHWC) with pytree params.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

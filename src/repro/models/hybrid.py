@@ -316,6 +316,60 @@ def decode_step_paged(params: Params, cfg: ModelConfig, token: jnp.ndarray,
     return logits, {"state": ns, "conv": ncw, "kp": nk, "vp": nv}
 
 
+def forward_chunk_paged(params: Params, cfg: ModelConfig,
+                        tokens: jnp.ndarray, pos: jnp.ndarray,
+                        block: jnp.ndarray, cache: Params, *,
+                        use_kernel: bool = False,
+                        write_block=None) -> Tuple[jnp.ndarray, Params, dict]:
+    """Chunked token lane for the hybrid: a ``lax.scan`` of per-token steps
+    (bitwise identical to C sequential ``decode_step_paged`` calls — the
+    mamba half is inherently sequential) emitting per-step {state, conv}
+    CHUNK-BOUNDARY SNAPSHOTS so a chunk can be rolled back to any intra-chunk
+    position; the shared-attention K/V lands in the pages positionally (a
+    rollback just rewinds the host position).  Token i of slot b writes at
+    ``pos[b] + i`` through ``write_block``.  Returns (logits (B, C, V) fp32,
+    cache, staged)."""
+
+    def step(carry, xs):
+        cache = carry
+        tok, j = xs
+        logits, cache = decode_step_paged(params, cfg, tok[:, None], pos + j,
+                                          block, cache, use_kernel=use_kernel,
+                                          write_block=write_block)
+        return cache, (logits, {"state": cache["state"],
+                                "conv": cache["conv"]})
+
+    c = tokens.shape[1]
+    cache, (logits, staged) = lax.scan(step, cache,
+                                       (tokens.T, jnp.arange(c)))
+    return logits.transpose(1, 0, 2), cache, staged
+
+
+def chunk_stage(cfg: ModelConfig, cache: Params) -> dict:
+    """Rollback-able recurrent slice (slot axis 2: leaves (G, K, B, ...))."""
+    return {"state": cache["state"], "conv": cache["conv"]}
+
+
+def restore_stage(cfg: ModelConfig, cache: Params, stage: dict,
+                  mask: jnp.ndarray) -> Params:
+    return dict(cache,
+                state=jnp.where(mask[None, None, :, None, None, None],
+                                stage["state"], cache["state"]),
+                conv=jnp.where(mask[None, None, :, None, None],
+                               stage["conv"], cache["conv"]))
+
+
+def select_stage(cfg: ModelConfig, staged: dict, keep: jnp.ndarray) -> dict:
+    """staged leaves (C, G, K, B, ...) -> snapshot after ``keep`` inputs."""
+    idx = jnp.maximum(keep - 1, 0)
+
+    def sel(a):
+        i = idx.reshape((1, 1, 1, -1) + (1,) * (a.ndim - 4))
+        return jnp.take_along_axis(a, i, axis=0)[0]
+
+    return {"state": sel(staged["state"]), "conv": sel(staged["conv"])}
+
+
 def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
             cache: Params, *, use_kernel: bool = False
             ) -> Tuple[jnp.ndarray, Params]:

@@ -360,6 +360,63 @@ def attention_decode_paged(params: Params, x: jnp.ndarray, pool_k: jnp.ndarray,
     return out, pool_k, pool_v
 
 
+def attention_chunk_paged(params: Params, x: jnp.ndarray, pool_k: jnp.ndarray,
+                          pool_v: jnp.ndarray, block: jnp.ndarray,
+                          pos: jnp.ndarray, *, num_heads: int, num_kv: int,
+                          head_dim: int, rope_theta: float,
+                          window: Optional[jnp.ndarray] = None,
+                          use_kernel: bool = False,
+                          write_block: Optional[jnp.ndarray] = None
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """CHUNK attention against the paged KV pool: C tokens per slot at
+    per-slot start positions — the multi-token generalisation of
+    :func:`attention_decode_paged` that powers the unified chunked token lane
+    (chunked prefill admission and the speculative verify pass).
+
+    x: (B, C, D); pos: (B,) int32 — token i of slot b sits at absolute
+    position ``pos[b] + i``.  All C tokens' K/V are scattered into the slot's
+    pages FIRST (through ``write_block``, shared pages masked to the null
+    page), then every query gathers the slot's whole page row with a mask
+    ``kpos <= pos[b] + i`` — positional masking supplies the intra-chunk
+    causal structure, so query i sees exactly the keys a sequential
+    ``attention_decode_paged`` at position ``pos[b] + i`` would have seen
+    (same K/V values: both paths round to the cache dtype before the read).
+    Positions past the slot's page row write to the null page.
+
+    Returns (out (B, C, D'), pool_k, pool_v)."""
+    b, c, _ = x.shape
+    page = pool_k.shape[1]
+    n_pages = block.shape[1]
+    s_tot = n_pages * page
+    q, k, v = _qkv(params, x, num_heads, num_kv, head_dim)
+    positions = pos[:, None] + jnp.arange(c)[None, :]       # (B, C) absolute
+    if rope_theta > 0:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    wb = block if write_block is None else write_block
+    logical = positions // page                              # (B, C)
+    in_range = logical < n_pages
+    rows = jnp.arange(b)[:, None]
+    pg = jnp.where(in_range, wb[rows, jnp.minimum(logical, n_pages - 1)], 0)
+    off = positions % page
+    pool_k = pool_k.at[pg, off].set(k.astype(pool_k.dtype), mode="drop")
+    pool_v = pool_v.at[pg, off].set(v.astype(pool_v.dtype), mode="drop")
+    kpos = jnp.arange(s_tot)[None, None, :]
+    valid = kpos <= positions[:, :, None]                    # (B, C, S_tot)
+    if window is not None:
+        valid = valid & (positions[:, :, None] - kpos < window)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        out = kops.decode_attention_chunk_paged(q, pool_k, pool_v, block,
+                                                valid)
+    else:
+        kk = pool_k[block].reshape(b, s_tot, num_kv, head_dim)
+        vv = pool_v[block].reshape(b, s_tot, num_kv, head_dim)
+        out = _sdpa(q, kk, vv, valid)
+    out = out.reshape(b, c, num_heads * head_dim) @ params["wo"]
+    return out, pool_k, pool_v
+
+
 def scatter_prefill_pages(pool: jnp.ndarray, seq_kv: jnp.ndarray,
                           block_rows: jnp.ndarray) -> jnp.ndarray:
     """Write a batch of sequences' prefill K (or V) into their pages.

@@ -457,6 +457,65 @@ def decode_step_paged(params: Params, cfg: ModelConfig, token: jnp.ndarray,
     return logits, {"state": ns, "conv": ncw}
 
 
+def forward_chunk_paged(params: Params, cfg: ModelConfig,
+                        tokens: jnp.ndarray, pos: jnp.ndarray,
+                        block: jnp.ndarray, cache: Params, *,
+                        use_kernel: bool = False,
+                        write_block=None) -> Tuple[jnp.ndarray, Params, dict]:
+    """Chunked token lane for the recurrent family: the chunk is consumed by
+    a ``lax.scan`` of per-token recurrent steps — bitwise identical to C
+    sequential ``decode_step_paged`` calls — and every step's {state, conv}
+    is emitted as a CHUNK-BOUNDARY SNAPSHOT (``staged``, leading axis C).
+    ``staged[j]`` holds the state after consuming exactly ``j + 1`` chunk
+    inputs, which is what lets the scheduler roll a slot back to ANY
+    intra-chunk boundary (speculative rejection) or commit a partial final
+    prefill chunk (``select_stage`` + ``restore_stage``).
+
+    Returns (logits (B, C, V) fp32, cache with the FULL chunk absorbed,
+    staged)."""
+    del pos, block, use_kernel, write_block      # recurrence is position-free
+
+    def step(carry, tok):
+        cache = carry
+        logits, cache = decode_step_paged(params, cfg, tok[:, None], None,
+                                          None, cache)
+        return cache, (logits, {"state": cache["state"],
+                                "conv": cache["conv"]})
+
+    cache, (logits, staged) = lax.scan(step, cache, tokens.T)
+    return logits.transpose(1, 0, 2), cache, staged
+
+
+def chunk_stage(cfg: ModelConfig, cache: Params) -> dict:
+    """The rollback-able slice of the cache: per-slot recurrent state + conv
+    window (attention families return {} — their state is positional)."""
+    return {"state": cache["state"], "conv": cache["conv"]}
+
+
+def restore_stage(cfg: ModelConfig, cache: Params, stage: dict,
+                  mask: jnp.ndarray) -> Params:
+    """Overwrite the recurrent state of slots where ``mask`` (B,) is True
+    with ``stage``'s values (leaves shaped like the cache's: slot axis 1)."""
+    return dict(cache,
+                state=jnp.where(mask[None, :, None, None, None],
+                                stage["state"], cache["state"]),
+                conv=jnp.where(mask[None, :, None, None],
+                               stage["conv"], cache["conv"]))
+
+
+def select_stage(cfg: ModelConfig, staged: dict, keep: jnp.ndarray) -> dict:
+    """Pick each slot's snapshot after exactly ``keep`` (B,) chunk inputs
+    (keep >= 1; masked out by the caller otherwise): ``staged[keep - 1]``
+    per slot, leaves (C, L, B, ...) -> (L, B, ...)."""
+    idx = jnp.maximum(keep - 1, 0)
+
+    def sel(a):
+        i = idx.reshape((1, 1, -1) + (1,) * (a.ndim - 3))
+        return jnp.take_along_axis(a, i, axis=0)[0]
+
+    return {"state": sel(staged["state"]), "conv": sel(staged["conv"])}
+
+
 def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
             cache: Params, *, use_kernel: bool = False
             ) -> Tuple[jnp.ndarray, Params]:

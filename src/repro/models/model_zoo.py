@@ -224,6 +224,127 @@ def decode_step_paged(params: Params, cfg: ModelConfig, token: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# chunked token lane (unified multi-token paged pass)
+# ---------------------------------------------------------------------------
+#
+# ``forward_chunk_paged`` is the generalisation that subsumes the other two
+# paged entry points: a (B, C) block of tokens for ALL slots at per-slot
+# start positions, K/V written through the block table, per-position logits
+# back.  ``decode_step_paged`` is the C = 1 special case; ``prefill_paged``
+# is the everything-at-once special case (kept as the batched admission
+# fast path).  The scheduler's chunked-prefill admission feeds long prompts
+# through this lane C tokens per tick, and the fused speculative cascade
+# uses it as the L tier's draft-verify pass.
+#
+# Rollback contract: the attention families' chunk state is positional
+# (rewinding the host position shadows the rejected tail), so their
+# ``staged`` is empty; the recurrent families emit per-step chunk-boundary
+# snapshots in ``staged`` and the scheduler commits the accepted boundary
+# with ``select_stage`` + ``restore_stage``.
+
+
+def forward_chunk_paged(params: Params, cfg: ModelConfig,
+                        tokens: jnp.ndarray, pos: jnp.ndarray,
+                        block: jnp.ndarray, cache, *,
+                        use_kernel: bool = False, write_block=None):
+    """One multi-token paged pass: tokens (B, C) at per-slot start positions
+    ``pos`` (B,) — token i of slot b lands at position ``pos[b] + i``.
+    Greedy outputs are token-identical to C sequential ``decode_step_paged``
+    calls — bitwise for the recurrent families, whose chunk IS a scan of the
+    per-token step (tests/test_chunk_lane.py asserts it per family).
+    Returns (logits (B, C, V) fp32, cache, staged)."""
+    if cfg.family in (DENSE, VLM):
+        return transformer.forward_chunk_paged(params, cfg, tokens, pos,
+                                               block, cache,
+                                               use_kernel=use_kernel,
+                                               write_block=write_block)
+    if cfg.family == MOE:
+        return moe.forward_chunk_paged(params, cfg, tokens, pos, block,
+                                       cache, use_kernel=use_kernel,
+                                       write_block=write_block)
+    if cfg.family == SSM:
+        return mamba2.forward_chunk_paged(params, cfg, tokens, pos, block,
+                                          cache, use_kernel=use_kernel,
+                                          write_block=write_block)
+    if cfg.family == HYBRID:
+        return hybrid.forward_chunk_paged(params, cfg, tokens, pos, block,
+                                          cache, use_kernel=use_kernel,
+                                          write_block=write_block)
+    raise ValueError(
+        f"forward_chunk_paged not supported for family {cfg.family!r}")
+
+
+def gather_chunk_slots(cfg: ModelConfig, cache, slots: jnp.ndarray):
+    """A W-row view of the cache for the scheduler's chunk-prefill lane:
+    the lane runs ``forward_chunk_paged`` over only the W slots actually
+    mid-prefill (W << num_slots), not the whole slot table.  Attention state
+    lives in the SHARED page pool (routed by the lane's gathered block rows),
+    so the attention families pass the cache through; the recurrent families
+    gather their per-slot state rows (sentinel rows gather-clamp harmlessly —
+    their writes drop on the scatter side)."""
+    if cfg.family == SSM:
+        return {"state": cache["state"][:, slots],
+                "conv": cache["conv"][:, slots]}
+    if cfg.family == HYBRID:
+        return {"state": cache["state"][:, :, slots],
+                "conv": cache["conv"][:, :, slots],
+                "kp": cache["kp"], "vp": cache["vp"]}
+    return cache
+
+
+def scatter_chunk_slots(cfg: ModelConfig, cache, mini, stage_sel,
+                        slots: jnp.ndarray):
+    """Merge a W-row chunk pass back into the full cache: page pools pass
+    through (the lane wrote them in place through its block rows); recurrent
+    state scatters the SELECTED boundary snapshot (``select_stage`` over the
+    lane's staged outputs — exactly ``chunk_keep`` inputs absorbed) at
+    ``slots`` (sentinel == num_slots drops)."""
+    if cfg.family == SSM:
+        return dict(cache,
+                    state=cache["state"].at[:, slots].set(
+                        stage_sel["state"], mode="drop"),
+                    conv=cache["conv"].at[:, slots].set(
+                        stage_sel["conv"], mode="drop"))
+    if cfg.family == HYBRID:
+        return dict(cache, kp=mini["kp"], vp=mini["vp"],
+                    state=cache["state"].at[:, :, slots].set(
+                        stage_sel["state"], mode="drop"),
+                    conv=cache["conv"].at[:, :, slots].set(
+                        stage_sel["conv"], mode="drop"))
+    return mini
+
+
+def chunk_stage(cfg: ModelConfig, cache):
+    """The rollback-able (recurrent) slice of a paged cache — {} for the
+    attention families, whose chunk state is positional."""
+    if cfg.family == SSM:
+        return mamba2.chunk_stage(cfg, cache)
+    if cfg.family == HYBRID:
+        return hybrid.chunk_stage(cfg, cache)
+    return {}
+
+
+def restore_stage(cfg: ModelConfig, cache, stage, mask: jnp.ndarray):
+    """Overwrite slots where ``mask`` (B,) is True with ``stage``'s recurrent
+    state (no-op for the attention families)."""
+    if cfg.family == SSM:
+        return mamba2.restore_stage(cfg, cache, stage, mask)
+    if cfg.family == HYBRID:
+        return hybrid.restore_stage(cfg, cache, stage, mask)
+    return cache
+
+
+def select_stage(cfg: ModelConfig, staged, keep: jnp.ndarray):
+    """Per-slot chunk-boundary snapshot after exactly ``keep`` (B,) inputs
+    (staged leaves carry a leading chunk axis; {} passes through)."""
+    if cfg.family == SSM:
+        return mamba2.select_stage(cfg, staged, keep)
+    if cfg.family == HYBRID:
+        return hybrid.select_stage(cfg, staged, keep)
+    return {}
+
+
+# ---------------------------------------------------------------------------
 # prefix cache (cross-request prompt reuse)
 # ---------------------------------------------------------------------------
 #

@@ -12,7 +12,7 @@ their hidden dim over ``data`` for the very large configs).
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -468,6 +468,48 @@ def decode_step_paged(params: Params, cfg: ModelConfig, token: jnp.ndarray,
     h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
     logits = (h[:, 0, :] @ params["lm_head"]).astype(jnp.float32)
     return logits, {"kp": nk, "vp": nv}
+
+
+def forward_chunk_paged(params: Params, cfg: ModelConfig,
+                        tokens: jnp.ndarray, pos: jnp.ndarray,
+                        block: jnp.ndarray, cache: Params, *,
+                        capacity_factor: float = 2.0,
+                        use_kernel: bool = False,
+                        write_block=None) -> Tuple[jnp.ndarray, Params, dict]:
+    """Chunked token lane for the MoE family: the SAME spliced attention +
+    page writes as the dense chunk pass, with the routed FFN dispatched over
+    all (B, C) chunk tokens together.  Routed dispatch stays batch-coupled
+    (as in ``prefill_paged``) — keep ``capacity_factor`` at the generous
+    decode-path default so chunk co-residency cannot introduce drops.
+    Returns (logits (B, C, V) fp32, cache, staged — empty, attention state
+    is positional)."""
+    h = params["embed"][tokens]
+    page = cache["kp"].shape[2]
+    s_tot = block.shape[1] * page
+    win = jnp.asarray(s_tot, jnp.int32)
+
+    def body(carry, xs):
+        x = carry
+        lp, pk, pv = xs
+        a, pk, pv = L.attention_chunk_paged(
+            lp["attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), pk, pv,
+            block, pos, num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+            window=win, use_kernel=use_kernel, write_block=write_block)
+        x = x + a
+        xn = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        y, _ = moe_ffn_auto(lp, cfg, xn, capacity_factor)
+        if "shared" in lp:
+            y = y + L.swiglu(lp["shared"], xn)
+        if "dense" in lp:
+            y = y + L.swiglu(lp["dense"], xn)
+        return x + y, (pk, pv)
+
+    h, (nk, nv) = lax.scan(body, h, (params["layers"], cache["kp"],
+                                     cache["vp"]))
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = (h @ params["lm_head"]).astype(jnp.float32)
+    return logits, {"kp": nk, "vp": nv}, {}
 
 
 def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,

@@ -432,6 +432,48 @@ def decode_step_paged(params: Params, cfg: ModelConfig, token: jnp.ndarray,
     return logits, {"kp": nk, "vp": nv}
 
 
+def forward_chunk_paged(params: Params, cfg: ModelConfig,
+                        tokens: jnp.ndarray, pos: jnp.ndarray,
+                        block: jnp.ndarray, cache: Params, *,
+                        use_kernel: bool = False,
+                        write_block: Optional[jnp.ndarray] = None
+                        ) -> Tuple[jnp.ndarray, Params, dict]:
+    """The chunked token lane: C tokens for ALL slots at per-slot start
+    positions in ONE multi-token paged pass — the generalisation that
+    subsumes both ``prefill_paged`` (chunked prompt ingestion: feed the
+    prompt C tokens per tick) and ``decode_step_paged`` (C = 1).
+
+    tokens: (B, C) int32; pos: (B,) int32 per-slot start positions (token i
+    of slot b lands at ``pos[b] + i``).  Per-position logits come back for
+    every chunk token — the speculative verify pass reads all of them, a
+    prefill chunk reads only its last live position.  Attention state is
+    entirely positional (rollback = rewind the host position), so the staged
+    snapshot dict is empty.  Returns (logits (B, C, V) fp32, cache, staged).
+    """
+    h = params["embed"][tokens]
+    page = cache["kp"].shape[2]
+    s_tot = block.shape[1] * page
+    windows = layer_windows(cfg, s_tot)
+
+    def body(carry, xs):
+        x = carry
+        lp, pk, pv, win = xs
+        a, pk, pv = L.attention_chunk_paged(
+            lp["attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), pk, pv,
+            block, pos, num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+            window=win, use_kernel=use_kernel, write_block=write_block)
+        x = x + a
+        m = L.swiglu(lp["mlp"], L.rmsnorm(lp["ln2"], x, cfg.norm_eps))
+        return x + m, (pk, pv)
+
+    h, (nk, nv) = lax.scan(body, h, (params["layers"], cache["kp"],
+                                     cache["vp"], windows))
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = (h @ params["lm_head"]).astype(jnp.float32)
+    return logits, {"kp": nk, "vp": nv}, {}
+
+
 def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
             cache: Params, *, patch_embeds: Optional[jnp.ndarray] = None
             ) -> Tuple[jnp.ndarray, Params]:

@@ -172,7 +172,6 @@ def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
     h = params["embed"][token] + \
         lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1, axis=0)[None]
     hd = cfg.resolved_head_dim
-    seq = cache["k"].shape[2]
 
     def body(carry, xs):
         x = carry

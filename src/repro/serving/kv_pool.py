@@ -234,6 +234,41 @@ class KVPool:
     def owned(self, slot: int) -> List[int]:
         return list(self._slot_pages.get(slot, []))
 
+    def truncate(self, slot: int, length: int) -> None:
+        """Rewind guard for the speculative rollback: verify that moving
+        ``slot``'s write position back to ``length`` can never append into a
+        page another slot can SEE.  Every page of the slot's block row from
+        the one covering position ``length`` onward must be held by exactly
+        this one slot (``slot_refs == 1``) — a co-resident alias there would
+        mean the rolled-back decode could overwrite positions another request
+        reads, so this RAISES instead of proceeding (copy-on-write
+        territory; admission guarantees the decode region is freshly
+        allocated, making this pure defense in depth).  A prefix-INDEX
+        retention on the partial prompt-tail page is fine: index readers
+        only ever alias prompt offsets, restores copy-on-write before
+        appending, and the rewound writer (length > prompt) never touches
+        prompt offsets — the same invariant the normal append path relies
+        on.  Refcounts are unchanged: the slot keeps its allocation and the
+        stale tail contents are shadowed by the positional mask, exactly
+        like the drain path's discarded overrun steps."""
+        if not 0 <= slot < self.num_slots:
+            raise ValueError(
+                f"slot {slot} out of range (0..{self.num_slots - 1})")
+        if slot not in self._slot_pages:
+            raise ValueError(f"truncate: slot {slot} holds no pages")
+        if length < 0:
+            raise ValueError(f"truncate to negative length {length}")
+        held = self._slot_pages[slot]
+        first = length // self.page_size
+        for p in self.block[slot, first:]:
+            if p == 0:
+                continue
+            if self._slot_refs[p] != 1 or p not in held:
+                raise ValueError(
+                    f"truncate would rewind slot {slot} into shared page "
+                    f"{int(p)} (slot_refs={int(self._slot_refs[p])}): "
+                    f"copy-on-write required")
+
     # -- prefix index -------------------------------------------------------
 
     def _reclaimable(self, tick: Optional[int] = None) -> int:
@@ -326,12 +361,17 @@ class KVPool:
 
     def admit_prefix(self, slot: int, context_len: int, bucket: int,
                      page_hashes: Optional[Sequence[bytes]],
-                     full_hash: Optional[bytes], tick: int
-                     ) -> Optional[AdmitPlan]:
+                     full_hash: Optional[bytes], tick: int, *,
+                     register: bool = True) -> Optional[AdmitPlan]:
         """Admission with prefix reuse: alias the longest cached prefix into
         ``slot``'s block row, allocate fresh pages for the rest, and decide
         restore / save / copy-on-write.  Returns None (no side effects) when
-        even eviction cannot produce enough fresh pages."""
+        even eviction cannot produce enough fresh pages.
+
+        ``register=False`` (chunked-prefill admission): the prompt's pages
+        fill over SEVERAL ticks, so neither the page index nor a full-prompt
+        entry may advertise them at ``tick + 1`` — the admission still READS
+        cached prefixes (aliasing, ``plan.start``) but retains nothing."""
         if not 0 <= slot < self.num_slots:
             raise ValueError(f"slot {slot} out of range (0..{self.num_slots - 1})")
         if slot in self._slot_pages:
@@ -388,7 +428,8 @@ class KVPool:
             # fresh pages for the uncached prompt suffix; register the FULL
             # ones in the page index (their content lands this tick, usable
             # from the next)
-            n_full = bucket // self.page_size if self.partial_prefix else 0
+            n_full = (bucket // self.page_size
+                      if self.partial_prefix and register else 0)
             for i in range(len(row), n_ctx):
                 p = self._pop_page(slot)
                 row.append(p)
@@ -396,11 +437,34 @@ class KVPool:
                     self._refs[p] += 1
                     self._page_index[page_hashes[i]] = \
                         _PageEntry(p, ready=tick + 1, used=tick)
-            plan.save_row = self._reserve_full_entry(
-                full_hash, row, bucket, tick)
+            if register:
+                plan.save_row = self._reserve_full_entry(
+                    full_hash, row, bucket, tick)
         self.block[slot, :] = 0
         self.block[slot, : len(row)] = row
         return plan
+
+    def retract(self, slot: int, page_hashes: Optional[Sequence[bytes]],
+                full_hash: Optional[bytes], tick: int) -> None:
+        """Undo the index registrations a SAME-TICK admission made, for an
+        admission that is being rolled back before its tick ran (paired
+        speculative admission where the partner tier failed).  Registered
+        entries become visible at ``tick + 1``; any entry for this prompt
+        still pending (``ready == tick + 1``) whose pages belong to ``slot``
+        was created by this admission — its pages will now never be written,
+        so it must not survive for a later lookup to alias garbage.  Entries
+        owned by a co-admitted identical prompt (different slot) are left
+        alone: their prefill still runs.  Call BEFORE ``free(slot)``."""
+        held = set(self._slot_pages.get(slot, ()))
+        for h in page_hashes or ():
+            e = self._page_index.get(h)
+            if e is not None and e.ready == tick + 1 and e.page in held:
+                self._drop_page_entry(h)
+        if full_hash is not None:
+            fe = self._full_index.get(full_hash)
+            if fe is not None and fe.ready == tick + 1 \
+                    and set(fe.pages) <= held:
+                self._drop_full_entry(full_hash)
 
     def _reserve_full_entry(self, full_hash: bytes, row: List[int],
                             bucket: int, tick: int) -> int:

@@ -1,4 +1,5 @@
-"""Continuous-batching scheduler over the paged KV pool.
+"""Continuous-batching scheduler over the paged KV pool — ONE chunked token
+lane per tick.
 
 The drain-path ``HIEngine.serve`` admits a whole (B, bucket) batch, runs the
 cascade, and only then admits the next batch: a finished sequence's slot idles
@@ -9,54 +10,78 @@ online-HI line of work, arXiv:2304.00891, for the per-sample admission model):
 
 * Each tier owns ``num_slots`` decode slots backed by ONE :class:`KVPool`.
 * Every scheduler *tick* is ONE device dispatch of one AOT-compiled program —
-  the SAME program regardless of prompt bucket — that, per tier, (a) executes
-  the admission plan's copy-on-write page duplications, (b) admits up to
-  ``admit_width`` queued requests in one batched (A, S_max) prefill into
-  their pages (``lax.cond``: skipped at runtime when every admission is a
-  full-prefix RESTORE — the prefix cache's throughput win), and (c) runs
-  ``decode_block`` fused decode steps for ALL slots at per-slot positions
-  (a ``lax.scan``, like the drain path's fused decode).
-* Host sync happens exactly once per tick, post-cascade, through the
-  engine's ``_host_fetch`` — the drain path's single-sync discipline at tick
-  granularity.
-* A sequence frees its slot the moment it finishes (EOS or its OWN
-  max-new-tokens); if its mean confidence fell below theta it re-queues onto
-  the L tier's admission queue (the S→L escalation), otherwise the S result
-  is final.  Decode steps a released slot computed past its request's end
-  are discarded on the host (bounded by ``decode_block - 1``).
+  the SAME program regardless of prompt bucket — and host sync happens
+  exactly once per tick, post-cascade, through the engine's ``_host_fetch``.
 
-Prefix sharing (``prefix_entries > 0``) changes admission, not decode: the
-pool aliases the longest content-hash-matched prefix of each prompt into the
-new slot's block row (refcount bump, read-only), the admit lane prefills
-ONLY the uncached suffix (``prefill_paged(..., start)``), and a FULL-prompt
-hit restores everything — pages, recurrent state, and last-position logits —
-from the device-side prefix cache without touching the admit lane at all.
-An admission that must append into a retained partial tail page gets a
-copy-on-write duplicate (scheduled in the same tick's program), and the
-decode write path takes a ``write_block`` table with shared pages masked to
-the null page.  The L tier keeps its own pool and index, so repeated S→L
-escalations of the same prompt skip the L prefill entirely.
+What one tick contains (the chunk-lane dispatch-count model)
+------------------------------------------------------------
+All lanes below live in the SAME compiled executable; build-time flags decide
+which lanes are traced, runtime ``lax.cond`` operands skip idle ones.  Per
+tier, in order:
+
+1. **COW lane** (sharing): the admission plan's copy-on-write page
+   duplications, so appends never touch a shared page.
+2. **Admit lane**: batched (A, S_max) prefill of up to ``admit_width`` queued
+   requests + prefix-cache save/restore (``lax.cond``-skipped when idle or
+   when every admission is a full-prefix restore).
+3. **Chunk-prefill lane** (``chunk_prefill``): ONE
+   ``model_zoo.forward_chunk_paged`` pass over a dedicated
+   (``chunk_width``, ``chunk_size``) lane — the host schedules up to W
+   still-prefilling slots per tick, each fed its next C prompt tokens at its
+   own position — so a long prompt is ingested C tokens per tick INTERLEAVED
+   with decode instead of monopolizing the admit lane (whose compiled width
+   shrinks to ~one chunk when chunking is on and sharing off, since no
+   long prompt ever reaches it); the slot that consumes its last chunk
+   samples token 0 from the chunk's final live logits and joins decode in
+   the same tick.  Recurrent families commit their state to exactly the
+   chunk's live token count via the lane's boundary snapshots
+   (``select_stage`` / ``scatter_chunk_slots``).
+4. **Draft/decode lane**: ``decode_block`` fused decode steps for every
+   decoding slot at per-slot positions (a ``lax.scan``); in speculative mode
+   this is the S tier's DRAFT, and each step also emits a chunk-boundary
+   state snapshot so the rejected tail can be rolled back.
+5. **Verify lane** (speculative, L tier only): ONE batched
+   ``forward_chunk_paged`` over the S tier's freshly drafted block — the
+   fused S→L token cascade.  Per slot: if the minimum per-token hi_gate
+   confidence over the draft clears theta the whole block is ACCEPTED at
+   S-tier cost; otherwise the L logits greedily re-derive each draft
+   position, the longest matching prefix is kept, the first divergence takes
+   the L token (the "bonus" correction), and the rejected tail is rolled
+   back — recurrent state via ``select_stage`` over the draft/verify
+   snapshots, attention state by rewinding the host position, with
+   ``KVPool.truncate`` asserting the rewind can never reach a shared page.
+
+The single host sync sits after ALL of the above: one ``_host_fetch`` of the
+tick's token/confidence/acceptance outputs.  ``stats['compiles']`` stays at 1
+no matter which lanes are enabled — chunking and speculation add operands and
+build-time lanes, never a shape.
+
+Prefix sharing (``prefix_entries > 0``) changes admission, not decode: see
+PR 3's notes.  Chunk-prefilled admissions still READ cached prefixes (they
+start at ``plan.start``) but register nothing — their pages fill over many
+ticks, and a same-tick alias would read unwritten pages.
 
 The L-tier admission queue additionally enforces the time-constrained
 offloading drop policy (Fresa & Champati, arXiv:2112.11413): an escalation
 whose request has outlived its ``latency_budget`` is dropped — the S-tier
 answer stands, ``stats["dropped"]`` counts it, and the result record is
-flagged.
+flagged.  (Speculative mode has no L queue: every request is admitted to
+BOTH tiers at the same slot index, and escalation happens per token block
+inside the tick.)
 
 Outputs are TOKEN-IDENTICAL to the drain path on the same bucketized
 prompts, for ANY ``admit_width``/``decode_block``, with prefix sharing ON or
-OFF: admission prefill reads each row's logits at ``length - 1`` of the same
-padded prompt (a suffix prefill splices the cached K/V — bitwise the values
-its own full pass would compute — under the in-pass projections; a restore
-replays logits the original admission computed), decode masks by position,
-and sampling keys are per-request + per-token-index — none of it depends on
-which slot, tick, or co-resident requests the sequence ran with.  One
-caveat: MoE routed dispatch is batch-coupled (capacity drops depend on
-co-admitted rows), so MoE prefix reuse is exact only up to routing-drop
-determinism — with the generous decode-path ``capacity_factor`` drops are
-absent on this reference and the equivalence tests hold; see
-``moe.prefill_paged``.  ``tests/test_scheduler.py`` and
-``tests/test_prefix_cache.py`` assert this end to end.
+OFF and chunked prefill ON or OFF (the chunk lane's per-position math is the
+decode step's — tests/test_chunk_lane.py asserts greedy-token identity per
+family, bitwise logits for the recurrent families whose chunk IS a scan of
+the per-token step).
+Speculative mode is greedy-only and matches the host-driven
+``token_cascade`` draft-verify oracle block for block
+(tests/test_speculative.py).  One caveat: MoE routed dispatch is
+batch-coupled (capacity drops depend on co-resident rows), so MoE equality
+is exact only up to routing-drop determinism — with the generous decode-path
+``capacity_factor`` drops are absent on this reference; see
+``moe.prefill_paged``.
 """
 from __future__ import annotations
 
@@ -80,9 +105,15 @@ from repro.serving.kv_pool import AdmitPlan, KVPool
 
 
 def _tier_tick_fn(cfg: ModelConfig, metric: str, use_kernel: bool,
-                  decode_block: int, sharing: bool):
+                  decode_block: int, sharing: bool, chunk: int = 0,
+                  role: str = "plain"):
     """Device-side per-tier tick: COW copies + batched cond-prefill +
-    prefix-cache save/restore + K fused decode steps for all slots."""
+    prefix-cache save/restore + chunk-prefill lane + K fused draft/decode
+    steps (or, for ``role == "spec_l"``, the fused verify chunk).
+
+    ``chunk``/``role`` are BUILD-time switches: with ``chunk == 0`` and
+    ``role == "plain"`` the traced graph is exactly the PR-2/3 tick, which
+    is what keeps greedy outputs bitwise stable with the new lanes off."""
 
     def conf_of(logits, theta):
         if use_kernel:
@@ -90,7 +121,9 @@ def _tier_tick_fn(cfg: ModelConfig, metric: str, use_kernel: bool,
             return kops.hi_gate(logits, theta, metric=metric)[0]
         return _confidence(logits, metric)
 
-    def tick(params, theta, tin, pool):
+    def admit_and_prefix(params, tin, pool):
+        """COW + batched admission prefill + prefix-cache save/restore.
+        Returns (admission logits0 (A, V), core, prefix-or-None)."""
         core = pool["core"]
         a = tin["admit_tokens"].shape[0]
 
@@ -119,6 +152,7 @@ def _tier_tick_fn(cfg: ModelConfig, metric: str, use_kernel: bool,
         # skipped when nothing is admitted — or (sharing) when every
         # admission this tick is a full-prefix restore
         logits0, core = jax.lax.cond(tin["any_prefill"], admit, skip, core)
+        prefix = None
         if sharing:
             prefix = pool["prefix"]
             # full restores read their admission logits + recurrent state
@@ -140,43 +174,160 @@ def _tier_tick_fn(cfg: ModelConfig, metric: str, use_kernel: bool,
             prefix = model_zoo.snapshot_save(cfg, core, prefix,
                                              tin["save_row"],
                                              tin["admit_slot"])
-        conf0 = conf_of(logits0, theta)                          # (A,)
+        return logits0, core, prefix
+
+    def chunk_lane(params, theta, tin, core):
+        """Chunked prefill: one multi-token pass over a DEDICATED W-row lane
+        (W = chunk_width slots scheduled by the host this tick, W <<
+        num_slots) feeding each its next C prompt tokens.  Reads route
+        through the scheduled slots' full block rows, writes through their
+        write-masked rows; recurrent state commits to exactly ``chunk_keep``
+        inputs via the lane's boundary snapshots and scatters back at the
+        scheduled slot ids (sentinel rows drop).  Returns the per-ROW last
+        live position's sampled token + confidence (consumed where
+        ``chunk_fin``)."""
+
+        def go(core):
+            mini = model_zoo.gather_chunk_slots(cfg, core, tin["chunk_slot"])
+            logits_c, mini, staged = model_zoo.forward_chunk_paged(
+                params, cfg, tin["chunk_tokens"], tin["chunk_pos"],
+                tin["chunk_block"], mini, use_kernel=use_kernel,
+                write_block=tin["chunk_wblock"])
+            sel = model_zoo.select_stage(cfg, staged, tin["chunk_keep"])
+            core = model_zoo.scatter_chunk_slots(cfg, core, mini, sel,
+                                                 tin["chunk_slot"])
+            idx = jnp.maximum(tin["chunk_keep"] - 1, 0)
+            last = jnp.take_along_axis(logits_c, idx[:, None, None],
+                                       axis=1)[:, 0]
+            return last, core
+
+        def skip(core):
+            w = tin["chunk_slot"].shape[0]
+            return jnp.zeros((w, cfg.vocab_size), jnp.float32), core
+
+        logits_c, core = jax.lax.cond(tin["any_chunk"], go, skip, core)
+        conf_c = conf_of(logits_c, theta)
+        keys = sampler.request_keys(tin["chunk_seed"], 0)
+        tok_c = sampler.sample(keys, logits_c, tin["chunk_temp"])
+        return tok_c, conf_c, core
+
+    def tick(params, theta, tin, pool, draft=None):
+        logits0, core, prefix = admit_and_prefix(params, tin, pool)
+        conf0 = conf_of(logits0, theta)
         keys0 = sampler.request_keys(tin["admit_seed"], 0)
         tok0 = sampler.sample(keys0, logits0, tin["admit_temp"])  # (A,)
 
         # admitted slots decode their own first tokens in the same tick;
         # padded admission rows carry an out-of-range slot -> dropped
         last0 = tin["last_tok"].at[tin["admit_slot"]].set(tok0, mode="drop")
+        out = {"admit_tok": tok0, "admit_conf": conf0}
+        if chunk:
+            tok_c, conf_c, core = chunk_lane(params, theta, tin, core)
+            n_slots = tin["last_tok"].shape[0]
+            fin_slot = jnp.where(tin["chunk_fin"], tin["chunk_slot"],
+                                 n_slots)
+            last0 = last0.at[fin_slot].set(tok_c, mode="drop")
+            out["chunk_tok"] = tok_c
+            out["chunk_conf"] = conf_c
         block = tin["block"]
-        wblock = tin["wblock"] if sharing else None
         b = block.shape[0]
+        wb = tin["draft_wblock"] if chunk else \
+            (tin["wblock"] if sharing else None)
 
-        def body(carry, k):
+        if role == "spec_l":
+            # ---- fused verify chunk over the S tier's drafts -------------
+            k = decode_block
+            toks = draft["toks"]                      # (K, B) S drafts
+            confs = draft["confs"]                    # (K, B) hi_gate confs
+            vin = jnp.concatenate([draft["last0"][None], toks[:-1]], 0).T
+
+            def verify(core):
+                pre = model_zoo.chunk_stage(cfg, core)
+                vlog, core, staged = model_zoo.forward_chunk_paged(
+                    params, cfg, vin, tin["pos"], block, core,
+                    use_kernel=use_kernel, write_block=wb)
+                # greedy-only acceptance (serve_stream raises on temp > 0)
+                lv = jnp.argmax(vlog, -1).astype(jnp.int32)      # (B, K)
+                live = tin["draft_live"]
+                esc = (confs.min(axis=0) < theta) & live
+                match = lv == toks.T
+                m = jnp.where(match.all(axis=1), k,
+                              jnp.argmax(~match, axis=1)).astype(jnp.int32)
+                accept = jnp.where(esc, m, k)        # drafts kept
+                keep = jnp.where(esc, jnp.minimum(m + 1, k), k)  # inputs kept
+                core = model_zoo.restore_stage(cfg, core, pre, ~live)
+                sel = model_zoo.select_stage(cfg, staged, keep)
+                core = model_zoo.restore_stage(cfg, core, sel, live)
+                cols = jnp.arange(k)[None, :]
+                bonus = esc[:, None] & (cols == m[:, None])
+                out_toks = jnp.where(bonus, lv, toks.T)
+                out_confs = jnp.where(bonus, 1.0, confs.T)  # L-verified token
+                n_emit = jnp.where(esc & (m < k), m + 1, k)
+                return out_toks, out_confs, keep, accept, esc, n_emit, core
+
+            def v_idle(core):
+                return (jnp.zeros((b, k), jnp.int32),
+                        jnp.zeros((b, k), jnp.float32),
+                        jnp.zeros((b,), jnp.int32),
+                        jnp.zeros((b,), jnp.int32),
+                        jnp.zeros((b,), bool),
+                        jnp.zeros((b,), jnp.int32), core)
+
+            (out_toks, out_confs, keep, accept, esc, n_emit, core) = \
+                jax.lax.cond(tin["any_live"], verify, v_idle, core)
+            out.update({"toks": out_toks, "confs": out_confs, "keep": keep,
+                        "accept": accept, "esc": esc, "n_emit": n_emit})
+            out_pool = {"core": core, "prefix": prefix} if sharing \
+                else {"core": core}
+            return out, out_pool
+
+        # ---- draft / decode scan (roles "plain" and "spec_s") ------------
+        def body(carry, kk):
             last, core = carry
             logits, core = model_zoo.decode_step_paged(
-                params, cfg, last[:, None], tin["pos"] + k, block, core,
-                use_kernel=use_kernel, write_block=wblock)
+                params, cfg, last[:, None], tin["pos"] + kk, block, core,
+                use_kernel=use_kernel, write_block=wb)
             confs_k = conf_of(logits, theta)
-            keys = sampler.request_keys(tin["seeds"], tin["tok_idx"] + k)
+            keys = sampler.request_keys(tin["seeds"], tin["tok_idx"] + kk)
             toks_k = sampler.sample(keys, logits, tin["temps"])
-            return (toks_k, core), (toks_k, confs_k)
+            ys = (toks_k, confs_k)
+            if role == "spec_s":
+                ys = ys + (model_zoo.chunk_stage(cfg, core),)
+            return (toks_k, core), ys
 
         def decode(core):
-            (_, core), (toks, confs) = jax.lax.scan(body, (last0, core),
-                                                    jnp.arange(decode_block))
-            return toks, confs, core
+            pre_d = model_zoo.chunk_stage(cfg, core) if chunk else None
+            (_, core), ys = jax.lax.scan(body, (last0, core),
+                                         jnp.arange(decode_block))
+            if chunk:
+                # slots still mid chunk-prefill took garbage draft steps:
+                # their page writes were null-masked, restore their state
+                core = model_zoo.restore_stage(cfg, core, pre_d,
+                                               ~tin["draft_live"])
+            if role == "spec_s":
+                toks, confs, staged = ys
+            else:
+                (toks, confs), staged = ys, {}
+            return toks, confs, staged, core
 
         def idle(core):
-            # this tier has no live slots this tick (e.g. the L tier before
-            # the first escalation arrives): skip the decode entirely
+            # this tier has no decoding slots this tick (e.g. everything is
+            # still chunk-prefilling): skip the scan entirely
+            staged = jax.tree.map(
+                lambda a: jnp.zeros((decode_block,) + a.shape, a.dtype),
+                model_zoo.chunk_stage(cfg, core)) if role == "spec_s" else {}
             return (jnp.zeros((decode_block, b), jnp.int32),
-                    jnp.zeros((decode_block, b), jnp.float32), core)
+                    jnp.zeros((decode_block, b), jnp.float32), staged, core)
 
-        toks, confs, core = jax.lax.cond(tin["any_live"], decode, idle, core)
+        toks, confs, staged, core = jax.lax.cond(tin["any_live"], decode,
+                                                 idle, core)
+        out.update({"toks": toks, "confs": confs})       # toks (K, B)
         out_pool = {"core": core, "prefix": prefix} if sharing \
             else {"core": core}
-        return {"admit_tok": tok0, "admit_conf": conf0,
-                "toks": toks, "confs": confs}, out_pool     # toks (K, B)
+        if role == "spec_s":
+            return out, out_pool, {"staged": staged, "toks": toks,
+                                   "confs": confs, "last0": last0}
+        return out, out_pool
 
     return tick
 
@@ -188,11 +339,15 @@ class _Active:
     steps: int
     tokens: List[int] = field(default_factory=list)
     confs: List[float] = field(default_factory=list)
+    rounds: List = field(default_factory=list)   # spec: (escalated, n_emit)
+    first_tok: float = 0.0                       # monotonic first-emit time
     hit_eos: bool = False
 
     def emit(self, tok: int, conf: float) -> None:
         if self.done:
             return
+        if not self.tokens:
+            self.first_tok = time.monotonic()
         self.tokens.append(int(tok))
         self.confs.append(float(conf))
         eos = self.adm.request.eos_id
@@ -203,6 +358,10 @@ class _Active:
     def done(self) -> bool:
         return self.hit_eos or len(self.tokens) >= self.steps
 
+    @property
+    def ttft(self) -> float:
+        return self.first_tok - self.adm.submit_time
+
 
 class _TierRuntime:
     """Host-side slot state for one tier (numpy mirrors of tick operands)."""
@@ -210,7 +369,8 @@ class _TierRuntime:
     def __init__(self, cfg: ModelConfig, num_slots: int, max_context: int,
                  page_size: int, admit_width: int, dtype,
                  prefix_entries: int = 0, max_prompt_len: int = 0,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None, chunk_size: int = 0,
+                 chunk_width: int = 2, spec: bool = False):
         if num_pages is None:
             # sharing headroom: beyond every slot's full context, enough
             # pages to RETAIN prefix_entries full prompts without evicting
@@ -223,6 +383,10 @@ class _TierRuntime:
         self.sharing = prefix_entries > 0
         self.num_slots = num_slots
         self.admit_width = admit_width
+        self.chunk_size = chunk_size
+        self.chunk_width = max(1, min(chunk_width, num_slots))
+        self.chunk_sched: List = []    # (slot, keep, fin) rows THIS tick
+        self.spec = spec
         self.default_temp = 0.0      # engine-level fallback (Request wins)
         self.slot_req: List[Optional[_Active]] = [None] * num_slots
         self.last_tok = np.zeros((num_slots,), np.int32)
@@ -230,6 +394,8 @@ class _TierRuntime:
         self.seeds = np.zeros((num_slots,), np.int32)
         self.tok_idx = np.zeros((num_slots,), np.int32)
         self.temps = np.zeros((num_slots,), np.float32)
+        self.chunk_fed = np.zeros((num_slots,), np.int32)   # prompt tokens fed
+        self.chunk_left = np.zeros((num_slots,), np.int32)  # 0 = decoding
         self.admitted: List[int] = []    # slots admitted THIS tick, row order
         self.plans: List[AdmitPlan] = []  # aligned admission plans
 
@@ -247,18 +413,34 @@ class _TierRuntime:
               tick: int) -> bool:
         """Claim a slot + pages for ``adm``; False if no capacity this tick.
         With sharing, the pool aliases the longest cached prefix and the
-        returned plan carries start / restore / save / COW decisions."""
+        returned plan carries start / restore / save / COW decisions.  With
+        ``chunk_size`` set, a prompt whose uncached remainder exceeds one
+        chunk skips the admit lane: its pages are claimed now and its tokens
+        flow through the chunk-prefill lane C per tick."""
         slot = self.free_slot()
         # decode writes reach bucket + steps - 2, plus <= K-1 overrun steps
         context = adm.bucket + max(steps - 1, 1) + (decode_block - 1)
         if slot is None:
             return False
-        if self.sharing:
+        chunked = bool(self.chunk_size) and adm.bucket > self.chunk_size
+        if self.sharing and not (chunked and self.spec):
             plan = self.pool.admit_prefix(slot, context, adm.bucket,
                                           adm.page_hashes, adm.full_hash,
-                                          tick)
+                                          tick, register=not chunked)
             if plan is None:
                 return False
+            if plan.is_restore:
+                chunked = False          # full hit: restoring beats chunking
+        elif self.sharing:
+            # speculative pairing: both tiers must chunk in LOCK-STEP (the
+            # verify lane gates on a shared readiness), so chunk admissions
+            # skip per-tier prefix hits — a hit in one tier's index but not
+            # the other's would desynchronise the pair's prefill progress
+            try:
+                self.pool.alloc(slot, context, tick=tick)
+            except ValueError:
+                return False
+            plan = AdmitPlan(slot=slot)
         else:
             if not self.pool.can_alloc(context):
                 return False
@@ -272,8 +454,12 @@ class _TierRuntime:
                             if adm.request.temperature > 0
                             else self.default_temp)
         self.last_tok[slot] = 0                # replaced on-device by tok0
-        self.admitted.append(slot)
-        self.plans.append(plan)
+        if chunked and adm.bucket - plan.start > self.chunk_size:
+            self.chunk_fed[slot] = plan.start
+            self.chunk_left[slot] = adm.bucket - plan.start
+        else:
+            self.admitted.append(slot)
+            self.plans.append(plan)
         return True
 
     def release(self, slot: int) -> _Active:
@@ -284,6 +470,8 @@ class _TierRuntime:
         self.tok_idx[slot] = 0
         self.temps[slot] = 0.0
         self.last_tok[slot] = 0
+        self.chunk_fed[slot] = 0
+        self.chunk_left[slot] = 0
         return rec
 
     def tick_inputs(self, s_max: int) -> Dict:
@@ -309,7 +497,6 @@ class _TierRuntime:
             "seeds": jnp.asarray(self.seeds),
             "tok_idx": jnp.asarray(self.tok_idx),
             "temps": jnp.asarray(self.temps),
-            "any_live": jnp.asarray(self.busy > 0),
             "admit_tokens": jnp.asarray(tokens),
             "admit_len": jnp.asarray(lens),
             "admit_slot": jnp.asarray(slots),
@@ -317,6 +504,67 @@ class _TierRuntime:
             "admit_seed": jnp.asarray(seeds),
             "admit_temp": jnp.asarray(temps),
         }
+        occupied = np.asarray([r is not None for r in self.slot_req])
+        if self.chunk_size:
+            c, w = self.chunk_size, self.chunk_width
+            npg = self.pool.n_pages_per_slot
+            base = self.pool.write_block() if self.sharing else self.pool.block
+            ctoks = np.zeros((w, c), np.int32)
+            cslot = np.full((w,), self.num_slots, np.int32)  # drop sentinel
+            cpos = np.zeros((w,), np.int32)
+            ckeep = np.zeros((w,), np.int32)
+            cfin = np.zeros((w,), bool)
+            cblock = np.zeros((w, npg), np.int32)
+            cwb = np.zeros((w, npg), np.int32)
+            cseed = np.zeros((w,), np.int32)
+            ctemp = np.zeros((w,), np.float32)
+            dlive = np.zeros((self.num_slots,), bool)
+            self.chunk_sched = []
+            for slot in range(self.num_slots):
+                rec = self.slot_req[slot]
+                if rec is None:
+                    continue
+                left = int(self.chunk_left[slot])
+                if left == 0:
+                    dlive[slot] = True
+                    continue
+                row = len(self.chunk_sched)
+                if row == w:
+                    continue               # lane full: this slot waits a tick
+                keep = min(c, left)
+                fed = int(self.chunk_fed[slot])
+                seg = rec.adm.tokens[fed:fed + c]
+                ctoks[row, : len(seg)] = seg
+                cslot[row] = slot
+                cpos[row] = fed
+                ckeep[row] = keep
+                cfin[row] = keep == left
+                cblock[row] = self.pool.block[slot]
+                cwb[row] = base[slot]
+                cseed[row] = self.seeds[slot]
+                ctemp[row] = self.temps[slot]
+                dlive[slot] = cfin[row]    # joins decode the same tick
+                self.chunk_sched.append((slot, keep, bool(cfin[row])))
+            out.update({
+                "chunk_tokens": jnp.asarray(ctoks),
+                "chunk_slot": jnp.asarray(cslot),
+                "chunk_pos": jnp.asarray(cpos),
+                "chunk_keep": jnp.asarray(ckeep),
+                "chunk_fin": jnp.asarray(cfin),
+                "any_chunk": jnp.asarray(bool(ckeep.any())),
+                "chunk_block": jnp.asarray(cblock),
+                "chunk_wblock": jnp.asarray(cwb),
+                "chunk_seed": jnp.asarray(cseed),
+                "chunk_temp": jnp.asarray(ctemp),
+                "draft_live": jnp.asarray(dlive),
+                "draft_wblock": jnp.asarray(
+                    np.where(dlive[:, None], base, 0).astype(np.int32)),
+            })
+            out["any_live"] = jnp.asarray(bool(dlive.any()))
+        else:
+            out["any_live"] = jnp.asarray(self.busy > 0)
+            if self.spec:
+                out["draft_live"] = jnp.asarray(occupied)
         if not self.sharing:
             out["any_prefill"] = jnp.asarray(bool(self.admitted))
             return out
@@ -372,14 +620,16 @@ class ContinuousScheduler:
 
     One instance = one AOT-compiled tick executable (``stats['compiles']``
     stays at 1 no matter how many prompt buckets flow through — the paged
-    pool removed the bucket from every device shape, and prefix sharing adds
-    only runtime operands).  ``admit_width`` batches admission prefills like
+    pool removed the bucket from every device shape, and prefix sharing,
+    chunked prefill, and the speculative cascade add only runtime operands
+    and build-time lanes).  ``admit_width`` batches admission prefills like
     the drain path batches prompts; ``decode_block`` fuses that many decode
-    steps per tick like the drain path's decode scan (host-discarded overrun
-    past a request's end is the latency/throughput knob).
-    ``prefix_sharing`` turns on the pool's content-addressed prefix reuse
-    (``prefix_entries`` full-prompt rows per tier, default 2x the tier's
-    slots).
+    steps per tick (and is the speculative DRAFT length k).
+    ``prefix_sharing`` turns on the pool's content-addressed prefix reuse.
+    ``chunk_prefill`` routes prompts longer than ``chunk_size`` through the
+    chunk lane (C tokens per tick, interleaved with decode).  ``speculative``
+    fuses the S→L draft-verify token cascade into the tick (greedy-only;
+    both tiers admit every request at the same slot index).
     """
 
     def __init__(self, s_tier, l_tier, hi: HIConfig, *, max_prompt_len: int,
@@ -389,10 +639,14 @@ class ContinuousScheduler:
                  use_kernel: bool = False, temperature: float = 0.0,
                  cache_dtype=jnp.bfloat16, prefix_sharing: bool = False,
                  prefix_entries: Optional[int] = None,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None,
+                 chunk_prefill: bool = False, chunk_size: int = 8,
+                 chunk_width: int = 2, speculative: bool = False):
         if max_prompt_len % page_size:
             raise ValueError(f"max_prompt_len {max_prompt_len} must be a "
                              f"multiple of page_size {page_size}")
+        if chunk_prefill and chunk_size < 1:
+            raise ValueError(f"chunk_size {chunk_size} must be >= 1")
         self.s = s_tier
         self.l = l_tier
         self.hi = hi
@@ -400,7 +654,12 @@ class ContinuousScheduler:
         self.max_new_tokens = max_new_tokens
         self.decode_block = max(1, decode_block)
         self.prefix_sharing = prefix_sharing
-        l_slots = l_slots if l_slots is not None else max(2, num_slots // 2)
+        self.speculative = speculative
+        self.chunk = int(chunk_size) if chunk_prefill else 0
+        if speculative:
+            l_slots = num_slots          # strict 1:1 slot pairing
+        else:
+            l_slots = l_slots if l_slots is not None else max(2, num_slots // 2)
         admit_width = admit_width if admit_width is not None else num_slots
         page = page_size
         raw_ctx = max_prompt_len + max_new_tokens + self.decode_block - 1
@@ -413,31 +672,65 @@ class ContinuousScheduler:
                                 admit_width, cache_dtype,
                                 prefix_entries=s_entries,
                                 max_prompt_len=max_prompt_len,
-                                num_pages=num_pages)
+                                num_pages=num_pages, chunk_size=self.chunk,
+                                chunk_width=chunk_width, spec=speculative)
         self.lrt = _TierRuntime(l_tier.cfg, l_slots, max_context, page,
-                                min(admit_width, l_slots), cache_dtype,
+                                admit_width if speculative
+                                else min(admit_width, l_slots), cache_dtype,
                                 prefix_entries=l_entries,
                                 max_prompt_len=max_prompt_len,
-                                num_pages=num_pages)
+                                num_pages=num_pages, chunk_size=self.chunk,
+                                chunk_width=chunk_width, spec=speculative)
         self.set_default_temperature(temperature)
+        # with chunking on (and no prefix hits routing long prompts back to
+        # the admit lane), every admit-lane prompt is <= chunk_size: the
+        # batched admission pass shrinks from (A, max_prompt_len) to
+        # (A, ~chunk_size) — the long-prompt traffic stops taxing every
+        # admission tick, which is the TTFT win bench_serving measures
+        self._admit_s_max = max_prompt_len
+        if self.chunk and not prefix_sharing:
+            self._admit_s_max = min(max_prompt_len,
+                                    -(-self.chunk // page) * page)
         self.stats: Dict[str, float] = {
             "requests": 0, "offloaded": 0, "dropped": 0, "ticks": 0,
-            "compiles": 0, "serve_time": 0.0}
+            "compiles": 0, "serve_time": 0.0, "blocks": 0,
+            "escalated_blocks": 0, "drafted": 0, "accepted": 0}
 
+        s_role = "spec_s" if speculative else "plain"
+        l_role = "spec_l" if speculative else "plain"
         s_tick = _tier_tick_fn(s_tier.cfg, hi.metric, use_kernel,
-                               self.decode_block, self.srt.sharing)
+                               self.decode_block, self.srt.sharing,
+                               chunk=self.chunk, role=s_role)
         l_tick = _tier_tick_fn(l_tier.cfg, hi.metric, use_kernel,
-                               self.decode_block, self.lrt.sharing)
+                               self.decode_block, self.lrt.sharing,
+                               chunk=self.chunk, role=l_role)
 
-        def tick(s_params, l_params, theta, s_in, l_in, s_pool, l_pool):
-            s_out, s_pool = s_tick(s_params, theta, s_in, s_pool)
-            l_out, l_pool = l_tick(l_params, theta, l_in, l_pool)
-            return {"s": s_out, "l": l_out}, s_pool, l_pool
+        if speculative:
+            s_cfg = s_tier.cfg
+
+            def tick(s_params, l_params, theta, s_in, l_in, s_pool, l_pool):
+                s_out, s_pool, s_ext = s_tick(s_params, theta, s_in, s_pool)
+                l_out, l_pool = l_tick(l_params, theta, l_in, l_pool,
+                                       draft=s_ext)
+                # roll the S tier back to the accepted boundary: recurrent
+                # state via the draft's per-step snapshots; attention state
+                # is positional (the host rewinds pos)
+                sel = model_zoo.select_stage(s_cfg, s_ext["staged"],
+                                             l_out["keep"])
+                core = model_zoo.restore_stage(s_cfg, s_pool["core"], sel,
+                                               s_in["draft_live"])
+                s_pool = dict(s_pool, core=core)
+                return {"s": s_out, "l": l_out}, s_pool, l_pool
+        else:
+            def tick(s_params, l_params, theta, s_in, l_in, s_pool, l_pool):
+                s_out, s_pool = s_tick(s_params, theta, s_in, s_pool)
+                l_out, l_pool = l_tick(l_params, theta, l_in, l_pool)
+                return {"s": s_out, "l": l_out}, s_pool, l_pool
 
         spec = partial(jax.tree.map,
                        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype))
-        s_in0 = self.srt.tick_inputs(max_prompt_len)
-        l_in0 = self.lrt.tick_inputs(max_prompt_len)
+        s_in0 = self.srt.tick_inputs(self._admit_s_max)
+        l_in0 = self.lrt.tick_inputs(self._admit_s_max)
         with warnings.catch_warnings():
             warnings.filterwarnings("ignore", message=".*[Dd]onat")
             self._exec = jax.jit(tick, donate_argnums=(5, 6)).lower(
@@ -467,19 +760,50 @@ class ContinuousScheduler:
 
     # -- host loop ----------------------------------------------------------
 
+    def _dispatch(self, theta_j):
+        """Build the tick operands, run the ONE compiled executable, store
+        the donated pools back, and host-fetch the outputs (the tick's single
+        sync)."""
+        from repro.serving import engine as engine_mod   # _host_fetch hook
+
+        s_in = self.srt.tick_inputs(self._admit_s_max)
+        l_in = self.lrt.tick_inputs(self._admit_s_max)
+        with warnings.catch_warnings():
+            warnings.filterwarnings("ignore", message=".*[Dd]onat")
+            out, s_pool, l_pool = \
+                self._exec(self.s.params, self.l.params, theta_j,
+                           s_in, l_in, self.srt.pool_operand(),
+                           self.lrt.pool_operand())
+        self.srt.store_pool(s_pool)
+        self.lrt.store_pool(l_pool)
+        host = engine_mod._host_fetch(out)   # the tick's single sync
+        self.stats["ticks"] += 1
+        return host
+
     def run(self, queue: AdmissionQueue, *, theta: Optional[float] = None
             ) -> Dict[int, Dict[str, Any]]:
         """Drain ``queue`` through the slots; returns per-request records
         keyed by request_id: tokens / s_tokens / confidence / offloaded /
-        served_remote / dropped (mirroring ``HIEngine.serve``'s fields)."""
-        from repro.serving import engine as engine_mod   # _host_fetch hook
-
+        served_remote / dropped / ttft (mirroring ``HIEngine.serve``'s
+        fields, plus the speculative block accounting when enabled)."""
         theta = float(self.hi.theta if theta is None else theta)
         theta_j = jnp.asarray(theta, jnp.float32)
         results: Dict[int, Dict[str, Any]] = {}
-        l_queue: deque = deque()
         t0 = time.perf_counter()
 
+        if self.speculative:
+            while len(queue) or self.srt.busy:
+                self._try_admit_spec(queue)
+                if not self.srt.admitted and not self.srt.busy:
+                    raise RuntimeError(
+                        "scheduler stalled: pool too small to admit a single "
+                        "request — raise num_pages / num_slots")
+                host = self._dispatch(theta_j)
+                self._absorb_spec(host, results)
+            self.stats["serve_time"] += time.perf_counter() - t0
+            return results
+
+        l_queue: deque = deque()
         while len(queue) or l_queue or self.srt.busy or self.lrt.busy:
             self._try_admit(self.srt, queue)
             self._drop_expired(l_queue, results)
@@ -491,18 +815,7 @@ class ContinuousScheduler:
                 raise RuntimeError(
                     "scheduler stalled: pool too small to admit a single "
                     "request — raise num_pages / num_slots")
-            s_in = self.srt.tick_inputs(self.max_prompt_len)
-            l_in = self.lrt.tick_inputs(self.max_prompt_len)
-            with warnings.catch_warnings():
-                warnings.filterwarnings("ignore", message=".*[Dd]onat")
-                out, s_pool, l_pool = \
-                    self._exec(self.s.params, self.l.params, theta_j,
-                               s_in, l_in, self.srt.pool_operand(),
-                               self.lrt.pool_operand())
-            self.srt.store_pool(s_pool)
-            self.lrt.store_pool(l_pool)
-            host = engine_mod._host_fetch(out)   # the tick's single sync
-            self.stats["ticks"] += 1
+            host = self._dispatch(theta_j)
             self._absorb(self.srt, host["s"],
                          lambda rec: self._finish_s(rec, theta, l_queue,
                                                     results))
@@ -521,7 +834,8 @@ class ContinuousScheduler:
         rt.admitted = []
         rt.plans = []
         tick = int(self.stats["ticks"])
-        while len(rt.admitted) < rt.admit_width and len(queue):
+        admitted = 0
+        while admitted < rt.admit_width and len(queue):
             if rt.free_slot() is None:
                 break
             adm = queue.popleft()
@@ -529,6 +843,42 @@ class ContinuousScheduler:
             if not rt.admit(adm, steps, self.decode_block, tick):
                 queue.appendleft(adm)   # no pages this tick: retry next tick
                 break
+            admitted += 1
+
+    def _try_admit_spec(self, queue) -> None:
+        """Speculative admission: both tiers claim the SAME slot index for a
+        request (strict pairing — the verify chunk addresses the L pool by
+        the S slot's id), prefill both caches through their admit lanes."""
+        srt, lrt = self.srt, self.lrt
+        srt.admitted, srt.plans = [], []
+        lrt.admitted, lrt.plans = [], []
+        tick = int(self.stats["ticks"])
+        admitted = 0
+        while admitted < srt.admit_width and len(queue):
+            slot = srt.free_slot()
+            if slot is None:
+                break
+            assert lrt.slot_req[slot] is None, "spec slot pairing broken"
+            adm = queue.popleft()
+            steps = min(adm.request.max_new_tokens, self.max_new_tokens)
+            if not srt.admit(adm, steps, self.decode_block, tick):
+                queue.appendleft(adm)
+                break
+            if not lrt.admit(adm, steps, self.decode_block, tick):
+                # roll the S-side admission back and retry next tick: drop
+                # any same-tick prefix-index registrations first (their pages
+                # will never be prefilled now — a later lookup must not alias
+                # them), then free the slot
+                if srt.admitted and srt.admitted[-1] == slot:
+                    srt.admitted.pop()
+                    srt.plans.pop()
+                if srt.sharing:
+                    srt.pool.retract(slot, adm.page_hashes, adm.full_hash,
+                                     tick)
+                srt.release(slot)
+                queue.appendleft(adm)
+                break
+            admitted += 1
 
     def _drop_expired(self, l_queue: deque, results: Dict) -> None:
         """arXiv:2112.11413 drop policy: an escalation whose request has
@@ -550,16 +900,31 @@ class ContinuousScheduler:
                 kept.append(adm)
         l_queue.extend(kept)
 
+    def _absorb_chunk(self, rt: _TierRuntime, out, emit: bool) -> None:
+        """Advance the tick's scheduled chunk-prefill rows; finishing rows
+        optionally emit their chunk-sampled token 0 (the S tier emits, the
+        paired L tier in speculative mode only advances bookkeeping)."""
+        for row, (slot, keep, fin) in enumerate(rt.chunk_sched):
+            rt.chunk_fed[slot] += keep
+            rt.chunk_left[slot] -= keep
+            if fin and emit:
+                rt.slot_req[slot].emit(out["chunk_tok"][row],
+                                       out["chunk_conf"][row])
+
     def _absorb(self, rt: _TierRuntime, out: Dict[str, np.ndarray],
                 finish) -> None:
         for row, slot in enumerate(rt.admitted):
             rt.slot_req[slot].emit(out["admit_tok"][row],
                                    out["admit_conf"][row])
+        if self.chunk:
+            self._absorb_chunk(rt, out, emit=True)
         k_steps = out["toks"].shape[0]
         for slot in range(rt.num_slots):
             rec = rt.slot_req[slot]
             if rec is None:
                 continue
+            if self.chunk and rt.chunk_left[slot] > 0:
+                continue               # still chunk-prefilling: no decode
             for k in range(k_steps):
                 rec.emit(out["toks"][k][slot], out["confs"][k][slot])
             rt.last_tok[slot] = int(out["toks"][k_steps - 1][slot])
@@ -567,6 +932,50 @@ class ContinuousScheduler:
             rt.pos[slot] += k_steps
             if rec.done:
                 finish(rt.release(slot))
+
+    def _absorb_spec(self, host: Dict, results: Dict) -> None:
+        """Fused-cascade absorb: per decoding slot the L verify decided how
+        many draft tokens stand (``accept``), which block input boundary both
+        caches keep (``keep``) and what to emit (``n_emit`` of ``toks``).
+        The host rewinds positions by the rejected tail and asserts the
+        rewind is COW-safe (``KVPool.truncate``)."""
+        s, l = host["s"], host["l"]
+        srt, lrt = self.srt, self.lrt
+        k = self.decode_block
+        for row, slot in enumerate(srt.admitted):
+            srt.slot_req[slot].emit(s["admit_tok"][row], s["admit_conf"][row])
+        if self.chunk:
+            self._absorb_chunk(srt, s, emit=True)
+            self._absorb_chunk(lrt, s, emit=False)
+        for slot in range(srt.num_slots):
+            rec = srt.slot_req[slot]
+            if rec is None:
+                continue
+            if self.chunk and srt.chunk_left[slot] > 0:
+                continue               # still chunk-prefilling: no decode
+            n = int(l["n_emit"][slot])
+            keep = int(l["keep"][slot])
+            esc = bool(l["esc"][slot])
+            rec.rounds.append((esc, n))
+            self.stats["blocks"] += 1
+            self.stats["drafted"] += k
+            self.stats["accepted"] += int(l["accept"][slot])
+            if esc:
+                self.stats["escalated_blocks"] += 1
+            for j in range(n):
+                rec.emit(l["toks"][slot][j], l["confs"][slot][j])
+            last = int(l["toks"][slot][max(n - 1, 0)])
+            for rt in (srt, lrt):
+                rt.pos[slot] += keep
+                rt.tok_idx[slot] += n
+                rt.last_tok[slot] = last
+                if keep < k:
+                    # the rejected tail is rolled back: assert the rewound
+                    # write position can never reach a shared page
+                    rt.pool.truncate(slot, int(rt.pos[slot]))
+            if rec.done:
+                self._finish_spec(srt.release(slot), results)
+                lrt.release(slot)
 
     def _finish_s(self, rec: _Active, theta: float, l_queue: deque,
                   results: Dict) -> None:
@@ -580,6 +989,7 @@ class ContinuousScheduler:
             "offloaded": conf < theta,
             "served_remote": False,
             "dropped": False,
+            "ttft": rec.ttft,
         }
         if conf < theta:
             self.stats["offloaded"] += 1
@@ -589,3 +999,23 @@ class ContinuousScheduler:
         rid = rec.adm.request.request_id
         results[rid]["tokens"] = np.asarray(rec.tokens, np.int32)
         results[rid]["served_remote"] = True
+
+    def _finish_spec(self, rec: _Active, results: Dict) -> None:
+        rid = rec.adm.request.request_id
+        self.stats["requests"] += 1
+        escalated = sum(1 for esc, _ in rec.rounds if esc)
+        if escalated:
+            self.stats["offloaded"] += 1
+        results[rid] = {
+            "tokens": np.asarray(rec.tokens, np.int32),
+            "s_tokens": np.asarray(rec.tokens, np.int32),
+            "confidence": float(np.mean(np.asarray(rec.confs, np.float32)))
+            if rec.confs else 1.0,
+            "offloaded": escalated > 0,
+            "served_remote": False,
+            "dropped": False,
+            "ttft": rec.ttft,
+            "rounds": list(rec.rounds),
+            "blocks": len(rec.rounds),
+            "escalated_blocks": escalated,
+        }

@@ -14,12 +14,24 @@ Cost accounting mirrors the paper exactly, one level down:
 Savings = (1 - escalated_fraction) of the L-tier work, with the S-tier draft
 as the paper's "extra local inference" term.
 
-Decoder-only text families; host-driven loop over jitted per-tier programs
-(the same architecture as HIEngine, one granularity finer).
+Two block policies live here:
+
+* :meth:`TokenCascade.generate` — the original REGENERATION policy: an
+  escalated block is fully re-drafted by the L tier from its own state.
+* :meth:`TokenCascade.generate_speculative` — DRAFT-VERIFY: an escalated
+  block gets one L pass over the drafted tokens, the longest prefix the L
+  tier agrees with is kept, the first divergence takes the L token (the
+  "bonus" correction), and both tiers rewind to the accepted boundary.
+
+The speculative loop is the host-driven ORACLE for the scheduler's fused
+in-tick cascade (``serve_stream(..., speculative=True)``): same block
+decisions, same emitted tokens, asserted by tests/test_speculative.py.
+Host-driven loop over jitted per-tier programs (the same architecture as
+HIEngine, one granularity finer).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import partial
 from typing import Any, Dict, List, Tuple
 
@@ -36,7 +48,8 @@ from repro.serving import sampler
 def _draft_block(params, cfg: ModelConfig, cache, last_logits, steps: int,
                  metric: str):
     """Greedy-draft ``steps`` tokens from current logits; returns
-    (tokens (B, steps), min confidence (B,), cache, last logits)."""
+    (tokens (B, steps), per-token confidences (steps, B), cache,
+    last logits)."""
 
     def body(carry, _):
         cache, logits = carry
@@ -47,7 +60,26 @@ def _draft_block(params, cfg: ModelConfig, cache, last_logits, steps: int,
 
     (cache, logits), (toks, confs) = jax.lax.scan(
         body, (cache, last_logits), None, length=steps)
-    return toks.T, confs.min(axis=0), cache, logits
+    return toks.T, confs, cache, logits
+
+
+def _verify_block(params, cfg: ModelConfig, cache, last_logits, draft):
+    """One verify pass over a drafted block: before feeding each draft token
+    the tier's greedy alternative for that position is recorded, then the
+    draft token is fed — so ``lv[:, j]`` is what this tier would have emitted
+    INSTEAD of ``draft[:, j]`` given the same history.  Returns
+    (lv (B, steps), cache, last logits) with the cache fully caught up over
+    the draft (the accepted-block path needs exactly that)."""
+
+    def body(carry, d_t):
+        cache, logits = carry
+        lv = sampler.greedy(logits)
+        logits, cache = model_zoo.decode_step(params, cfg, d_t[:, None],
+                                              cache)
+        return (cache, logits), lv
+
+    (cache, logits), lvs = jax.lax.scan(body, (cache, last_logits), draft.T)
+    return lvs.T, cache, logits
 
 
 def _feed_tokens(params, cfg: ModelConfig, cache, tokens):
@@ -85,6 +117,7 @@ class TokenCascade:
         self._l_draft = jax.jit(partial(_draft_block, cfg=self.l_cfg,
                                         steps=self.block,
                                         metric=self.hi.metric))
+        self._l_verify = jax.jit(partial(_verify_block, cfg=self.l_cfg))
         self.stats = {"blocks": 0, "escalated": 0}
 
     def generate(self, prompt: np.ndarray, num_blocks: int) -> Dict[str, Any]:
@@ -127,6 +160,98 @@ class TokenCascade:
             "escalated": self.stats["escalated"],
             "escalation_frac": self.stats["escalated"]
             / max(self.stats["blocks"], 1),
+        }
+
+    def generate_speculative(self, prompt: np.ndarray, max_new: int
+                             ) -> Dict[str, Any]:
+        """DRAFT-VERIFY block policy, host-driven — the scheduler's fused
+        in-tick cascade oracle.  ``prompt``: (1, P) (single sequence: the
+        accepted prefix length is per-sequence data, which the host loop
+        resolves by rewinding — batch-level speculation is the fused
+        scheduler's job).  Greedy-only, mirroring the one-program lane.
+
+        Round structure (identical to one scheduler tick for one slot):
+        token 0 is the prompt's greedy continuation (the admission token,
+        emitted unconditionally); each round drafts ``self.block`` tokens
+        with per-token confidences; a round whose MIN confidence clears
+        theta is accepted wholesale (S-tier cost only — the HI argument at
+        block granularity); otherwise ONE L verify pass re-derives each
+        position, the longest prefix where L agrees is kept, the first
+        divergence emits L's token, and BOTH tiers rewind to the accepted
+        boundary (re-feeding the emitted tokens from the pre-round caches —
+        bitwise the state the fused lane's snapshot rollback restores).
+
+        Returns dict(tokens (1, <= max_new), rounds [(escalated, n_emit)],
+        blocks, escalated, accept_rate)."""
+        if prompt.shape[0] != 1:
+            raise ValueError("generate_speculative runs one sequence "
+                             "(B = 1); batch speculation is the scheduler's")
+        k = self.block
+        prompt_j = jnp.asarray(prompt)
+        s_cache = model_zoo.init_cache(self.s_cfg, 1, self.cache_len)
+        l_cache = model_zoo.init_cache(self.l_cfg, 1, self.cache_len)
+        s_cache, s_logits = self._s_feed(self.s_params, cache=s_cache,
+                                         tokens=prompt_j)
+        l_cache, l_logits = self._l_feed(self.l_params, cache=l_cache,
+                                         tokens=prompt_j)
+        tok0 = sampler.greedy(s_logits)                    # admission token
+        emitted: List[int] = [int(tok0[0])]
+        s_cache, s_logits = self._s_feed(self.s_params, cache=s_cache,
+                                         tokens=tok0[:, None])
+        l_cache, l_logits = self._l_feed(self.l_params, cache=l_cache,
+                                         tokens=tok0[:, None])
+
+        rounds: List[Tuple[bool, int]] = []
+        drafted = accepted = 0
+        while len(emitted) < max_new:
+            pre = (s_cache, s_logits, l_cache, l_logits)
+            toks, confs, s_cache2, s_logits2 = self._s_draft(
+                self.s_params, cache=s_cache, last_logits=s_logits)
+            drafted += k
+            esc = bool(float(confs.min()) < self.hi.theta)
+            if not esc:
+                # accepted at S-tier cost; the L verify doubles as catch-up
+                s_cache, s_logits = s_cache2, s_logits2
+                _, l_cache, l_logits = self._l_verify(
+                    self.l_params, cache=l_cache, last_logits=l_logits,
+                    draft=toks)
+                out_toks, n = toks, k
+                accepted += k
+            else:
+                lv, l_cache2, l_logits2 = self._l_verify(
+                    self.l_params, cache=l_cache, last_logits=l_logits,
+                    draft=toks)
+                mism = np.flatnonzero(np.asarray(lv[0]) != np.asarray(toks[0]))
+                m = int(mism[0]) if len(mism) else k
+                accepted += m
+                if m == k:                     # L agrees with every draft
+                    s_cache, s_logits = s_cache2, s_logits2
+                    l_cache, l_logits = l_cache2, l_logits2
+                    out_toks, n = toks, k
+                else:
+                    # keep the agreed prefix + L's correction, rewind both
+                    # tiers to the pre-round caches and re-feed the kept
+                    # tokens (the host mirror of the fused lane's snapshot
+                    # rollback + positional rewind)
+                    out_toks = jnp.concatenate(
+                        [toks[:, :m], lv[:, m:m + 1]], axis=1)
+                    n = m + 1
+                    s_cache, s_logits, l_cache, l_logits = pre
+                    s_cache, s_logits = self._s_feed(
+                        self.s_params, cache=s_cache, tokens=out_toks)
+                    l_cache, l_logits = self._l_feed(
+                        self.l_params, cache=l_cache, tokens=out_toks)
+            rounds.append((esc, n))
+            self.stats["blocks"] += 1
+            if esc:
+                self.stats["escalated"] += 1
+            emitted.extend(int(t) for t in np.asarray(out_toks[0]))
+        return {
+            "tokens": np.asarray(emitted[:max_new], np.int32)[None, :],
+            "rounds": rounds,
+            "blocks": len(rounds),
+            "escalated": sum(1 for e, _ in rounds if e),
+            "accept_rate": accepted / max(drafted, 1),
         }
 
 

@@ -10,7 +10,6 @@ from __future__ import annotations
 
 from typing import Optional, Tuple
 
-import jax
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 

@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import time
 from functools import partial
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -1,19 +1,16 @@
 """Unit tests for the HI core, pinned to the paper's published numbers."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import HIConfig
 from repro.core import calibrate, replay
-from repro.core.baselines import (TimingModel, dnn_partitioning, full_offload,
-                                  oma, omd, partition_per_sample_ms, tinyml)
+from repro.core.baselines import (TimingModel, full_offload, oma, omd,
+                                  partition_per_sample_ms, tinyml)
 from repro.core.cascade import classifier_cascade
-from repro.core.confidence import confidence
 from repro.core.cost import CostReport, cost_closed_form, relative_cost_reduction
 from repro.core.policy import (BinaryRelevancePolicy, OnlineThresholdPolicy,
                                ThresholdPolicy)
-from repro.core.router import capacity_for, gather, route, scatter_merge
+from repro.core.router import route, scatter_merge
 
 
 # ---------------------------------------------------------------------------

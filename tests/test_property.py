@@ -1,5 +1,4 @@
 """Property-based tests (hypothesis) on the system's invariants."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -10,7 +9,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import calibrate
 from repro.core.cost import per_sample_cost, total_cost
-from repro.core.router import capacity_for, gather, route, scatter_merge
+from repro.core.router import route, scatter_merge
 from repro.models import moe as moe_mod
 
 settings.register_profile("ci", max_examples=25, deadline=None)

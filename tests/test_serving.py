@@ -1,5 +1,4 @@
 """Serving path: batcher, HI engine end-to-end on a reduced arch."""
-import jax
 import numpy as np
 import pytest
 
@@ -109,7 +108,6 @@ def test_engine_online_policy_adapts():
     worthwhile, so theta rises toward 1 as batches stream."""
     from repro.core.policy import OnlineThresholdPolicy
     from repro.serving.engine import build_engine
-    import jax
     cfg = ARCHS["gemma3-1b"].reduced()
     pol = OnlineThresholdPolicy(beta=0.1, grid=32, eta_lr=0.5)
     hi = HIConfig(theta=0.5, capacity_factor=1.0)

@@ -1,0 +1,140 @@
+"""Fused speculative S→L cascade: the in-tick draft-verify lane must match
+the host-driven ``token_cascade.generate_speculative`` oracle block for
+block, stay greedy-only (temperature raises), keep the one-program / single-
+sync discipline, and degrade to pure-S greedy when the gate never fires."""
+import numpy as np
+import pytest
+
+from repro.configs.base import HIConfig
+from repro.configs.registry import ARCHS
+from repro.serving import engine as engine_mod
+from repro.serving.batcher import Request
+from repro.serving.engine import build_engine
+from repro.serving.token_cascade import TokenCascade
+
+MAX_NEW = 6
+K = 3
+
+
+def _engine_and_oracle(arch, theta, block=K, max_new=MAX_NEW):
+    cfg = ARCHS[arch].reduced()
+    hi = HIConfig(theta=theta, capacity_factor=1.0)
+    eng = build_engine(cfg, hi, max_new_tokens=max_new, cache_len=48)
+    tc = TokenCascade(s_cfg=eng.s.cfg, l_cfg=eng.l.cfg,
+                      s_params=eng.s.params, l_params=eng.l.params,
+                      hi=hi, block=block, cache_len=48)
+    return cfg, eng, tc
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "mamba2-370m"])
+def test_fused_cascade_matches_host_oracle(arch):
+    """Same traffic through the fused in-tick cascade and the legacy-style
+    host-driven loop: identical accepted/escalated BLOCK decisions and
+    identical emitted tokens, per request."""
+    cfg, eng, tc = _engine_and_oracle(arch, theta=0.5)
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+               for _ in range(3)]
+    out = eng.serve_stream(
+        [Request(i, p, max_new_tokens=MAX_NEW)
+         for i, p in enumerate(prompts)],
+        buckets=(8,), num_slots=2, page_size=8, decode_block=K,
+        speculative=True)
+    for i, p in enumerate(prompts):
+        ref = tc.generate_speculative(p[None, :], MAX_NEW)
+        np.testing.assert_array_equal(out[i]["tokens"], ref["tokens"][0])
+        assert out[i]["rounds"] == ref["rounds"]
+        assert out[i]["escalated_blocks"] == ref["escalated"]
+    # the lane stays ONE compiled executable with speculation fused in
+    assert eng.stats["stream_compiles"] == 1
+
+
+def test_fused_cascade_single_sync_per_tick(monkeypatch):
+    """Draft + verify + rollback all live inside the tick's one program:
+    still exactly one host fetch per tick."""
+    calls = []
+    real = engine_mod._host_fetch
+    monkeypatch.setattr(engine_mod, "_host_fetch",
+                        lambda tree: (calls.append(1), real(tree))[1])
+    cfg, eng, _ = _engine_and_oracle("qwen2-1.5b", theta=0.5)
+    rng = np.random.default_rng(0)
+    eng.serve_stream([Request(0, rng.integers(0, cfg.vocab_size, 8)
+                              .astype(np.int32), max_new_tokens=MAX_NEW)],
+                     buckets=(8,), num_slots=1, page_size=8, decode_block=K,
+                     speculative=True)
+    sched = eng._stream[1]
+    assert len(calls) == sched.stats["ticks"] > 0
+    sched.srt.pool.check_invariants()
+    sched.lrt.pool.check_invariants()
+
+
+def test_speculative_never_escalates_equals_greedy_stream():
+    """theta = 0: the gate never fires, every draft block is accepted — the
+    fused cascade must emit exactly the plain scheduler's S-tier greedy
+    tokens (the chunking/speculation-off bitwise guarantee)."""
+    cfg = ARCHS["qwen2-1.5b"].reduced()
+    hi = HIConfig(theta=0.0, capacity_factor=1.0)
+    rng = np.random.default_rng(5)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size, n).astype(np.int32),
+                    max_new_tokens=MAX_NEW)
+            for i, n in enumerate([8, 16, 8])]
+    eng_p = build_engine(cfg, hi, max_new_tokens=MAX_NEW, cache_len=48)
+    plain = eng_p.serve_stream(reqs, buckets=(8, 16), num_slots=2,
+                               page_size=8)
+    eng_s = build_engine(cfg, hi, max_new_tokens=MAX_NEW, cache_len=48)
+    spec = eng_s.serve_stream(reqs, buckets=(8, 16), num_slots=2,
+                              page_size=8, decode_block=K, speculative=True)
+    for rid in plain:
+        np.testing.assert_array_equal(plain[rid]["s_tokens"],
+                                      spec[rid]["tokens"])
+        assert spec[rid]["escalated_blocks"] == 0
+        assert not spec[rid]["offloaded"]
+    sched = eng_s._stream[1]
+    assert sched.stats["accepted"] == sched.stats["drafted"] > 0
+
+
+def test_speculative_with_chunked_prefill_matches_plain_speculative():
+    """Both tentpole features on at once: chunked prompt ingestion must not
+    change a single speculative token."""
+    cfg, eng_a, _ = _engine_and_oracle("qwen2-1.5b", theta=0.5)
+    rng = np.random.default_rng(2)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size, n).astype(np.int32),
+                    max_new_tokens=MAX_NEW)
+            for i, n in enumerate([24, 8, 16])]
+    base = eng_a.serve_stream(reqs, buckets=(8, 16, 24), num_slots=2,
+                              page_size=8, decode_block=K, speculative=True)
+    _, eng_b, _ = _engine_and_oracle("qwen2-1.5b", theta=0.5)
+    both = eng_b.serve_stream(reqs, buckets=(8, 16, 24), num_slots=2,
+                              page_size=8, decode_block=K, speculative=True,
+                              chunk_prefill=True, chunk_size=8)
+    for rid in base:
+        np.testing.assert_array_equal(base[rid]["tokens"],
+                                      both[rid]["tokens"])
+        assert base[rid]["rounds"] == both[rid]["rounds"]
+    assert eng_b.stats["stream_compiles"] == 1
+
+
+def test_speculative_temperature_raises():
+    """Speculative acceptance is greedy-only: any sampling temperature —
+    per-request or engine-wide — raises a clear NotImplementedError."""
+    cfg = ARCHS["qwen2-1.5b"].reduced()
+    hi = HIConfig(theta=0.5, capacity_factor=1.0)
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+
+    eng = build_engine(cfg, hi, max_new_tokens=4, cache_len=48)
+    with pytest.raises(NotImplementedError, match="greedy-only"):
+        eng.serve_stream([Request(0, prompt, temperature=0.7)],
+                         buckets=(8,), speculative=True)
+
+    eng_t = build_engine(cfg, hi, max_new_tokens=4, cache_len=48,
+                         temperature=0.8)
+    with pytest.raises(NotImplementedError, match="greedy-only"):
+        eng_t.serve_stream([Request(0, prompt)], buckets=(8,),
+                           speculative=True)
+
+    # greedy requests through a greedy engine still serve fine
+    out = eng.serve_stream([Request(0, prompt, max_new_tokens=4)],
+                           buckets=(8,), num_slots=1, page_size=8,
+                           decode_block=2, speculative=True)
+    assert len(out[0]["tokens"]) == 4

@@ -1,7 +1,6 @@
 """End-to-end behaviour tests: the paper's central claims hold on the
 synthetic reproductions of its three use cases (trained tiers, calibrated
 threshold, full cascade)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,5 +1,4 @@
 """Block-granularity token-level HI (serving/token_cascade.py)."""
-import jax
 import numpy as np
 import pytest
 

@@ -1,6 +1,5 @@
 """Training substrate: grad accumulation equivalence, optimizer behaviour,
 checkpoint roundtrip, loss goes down."""
-import os
 
 import jax
 import jax.numpy as jnp
@@ -10,7 +9,6 @@ import pytest
 from repro.checkpoint import io as ckpt_io
 from repro.configs.base import TrainConfig
 from repro.configs.registry import ARCHS
-from repro.data import tokens as token_data
 from repro.models import model_zoo as zoo
 from repro.optim import adamw
 from repro.training import trainer
