@@ -43,8 +43,20 @@ is primarily the acceptance-rate instrument; req/s on random weights is the
 worst case (every block pays draft + verify).  Results land in
 ``BENCH_serving.json`` so the perf trajectory is tracked PR-over-PR.
 
+The OUTAGE scenario measures fail-local resilience (``serving/faults.py``):
+the calibrated mixed trace is replayed with an L-tier outage window sized
+off the observed fault-free tick count.  Escalations failing into the
+window open the circuit breaker; requests degrade to their S-tier answers
+(``status="degraded_local"``) instead of stalling, and after the window +
+cooldown the half-open probe restores remote serving.  Reported: req/s with
+vs without the outage (throughput sustained), the degraded-local fraction,
+the S-vs-L serve mix against the fault-free run (recovery of the offload
+rate), and breaker open/close counts.
+
   PYTHONPATH=src python -m benchmarks.bench_serving [--out BENCH_serving.json]
-  PYTHONPATH=src python -m benchmarks.bench_serving --smoke   # CI tier-1
+  PYTHONPATH=src python -m benchmarks.bench_serving --smoke        # CI tier-1
+  PYTHONPATH=src python -m benchmarks.bench_serving --chaos-smoke  # CI chaos
+                    # gate: seeded fault schedules + per-tick pool invariants
 """
 from __future__ import annotations
 
@@ -63,6 +75,7 @@ from repro.configs.registry import ARCHS
 from repro.models import model_zoo
 from repro.serving.batcher import Batcher, Request, pad_to_bucket
 from repro.serving.engine import build_engine
+from repro.serving.faults import STATUSES, FaultSchedule, RetryPolicy
 
 ARCH = "qwen2-1.5b"
 REQUESTS = 32
@@ -356,6 +369,147 @@ def _bench_speculative(cfg, reqs, theta: float, iters: int):
     }
 
 
+# outage scenario: a fast-failing retry policy so the breaker's open/close
+# arc fits inside the trace (production would run longer timeouts)
+OUTAGE_RETRY = dict(ack_timeout_ticks=2, max_retries=1,
+                    breaker_threshold=2, breaker_cooldown_ticks=2)
+
+
+def _bench_outage(cfg, reqs, iters: int):
+    """Fail-local resilience on the mixed trace at a ~50% offload rate: an
+    L outage window (sized off the observed fault-free tick count) opens
+    the breaker, throughput is sustained on degraded-local answers, and
+    remote serving recovers after the window.
+
+    Half the slots and a small decode block stretch the trace over many
+    admission waves — the tick axis needs room for a during-outage phase
+    AND a post-recovery phase, or the breaker arc can't be observed."""
+    kw = dict(buckets=STREAM_BUCKETS, num_slots=NUM_SLOTS // 2,
+              l_slots=NUM_SLOTS // 4, page_size=PAGE_SIZE, decode_block=2)
+    eng = build_engine(cfg, HIConfig(theta=0.0, capacity_factor=1.0),
+                       max_new_tokens=MAX_NEW, cache_len=CACHE_LEN)
+    probe = eng.serve_stream(reqs, **kw)       # warm + confidence probe
+    # median confidence -> ~half the trace escalates: enough L traffic for
+    # the breaker arc to be visible even in the smoke sizing
+    theta = float(np.quantile(np.asarray(
+        [r["confidence"] for r in probe.values()]), 0.5))
+    eng.hi = HIConfig(theta=theta, capacity_factor=1.0)
+    ticks0 = int(eng.stats["stream_ticks"])
+    ref = eng.serve_stream(reqs, **kw)         # fault-free reference
+    ticks = int(eng.stats["stream_ticks"]) - ticks0   # size the window off
+    outage = (max(1, ticks // 6), max(3, ticks // 3))  # observed reality
+    faults = FaultSchedule(seed=0, outages=(outage,))
+    retry = RetryPolicy(**OUTAGE_RETRY)
+
+    def timed(f=None, r=None):
+        best, last = None, None
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            last = eng.serve_stream(reqs, faults=f, retry=r, **kw)
+            dt = time.perf_counter() - t0
+            if best is None or dt < best:
+                best = dt
+        return best, last
+
+    t_free, _ = timed()
+    opens0 = eng.stats["breaker_opens"]
+    ticks0 = eng.stats["breaker_open_ticks"]
+    retries0 = eng.stats["esc_retries"]
+    t_out, out = timed(faults, retry)
+
+    n = len(reqs)
+    remote_ref = sum(r["served_remote"] for r in ref.values())
+    remote = sum(r["served_remote"] for r in out.values())
+    degraded = sum(r["status"] == "degraded_local" for r in out.values())
+    # the recovery criterion proper: escalations CREATED after the window +
+    # cooldown must all reach L (fault-free offload behaviour restored)
+    recovered_after = outage[1] + OUTAGE_RETRY["breaker_cooldown_ticks"]
+    post = [r for r in out.values()
+            if r["esc_created_tick"] >= recovered_after]
+    post_remote = (sum(r["served_remote"] for r in post) / len(post)
+                   if post else None)
+    return {
+        "requests": n,
+        "theta_calibrated": theta,
+        "outage_window_ticks": list(outage),
+        "fault_free_ticks": ticks,
+        "retry_policy": dict(OUTAGE_RETRY),
+        "fault_free_rps": n / t_free,
+        "outage_rps": n / t_out,
+        "throughput_sustained_frac": t_free / t_out,
+        "offload_frac": sum(r["offloaded"] for r in out.values()) / n,
+        "degraded_local_frac": degraded / n,
+        # S-vs-L serve mix: during the window escalations fail local, after
+        # it they land on L again — recovery shows up as remote serves
+        # approaching the fault-free count
+        "remote_frac_fault_free": remote_ref / n,
+        "remote_frac_outage": remote / n,
+        "remote_recovery_frac": remote / max(remote_ref, 1),
+        "post_window_escalations": len(post),
+        "post_window_remote_frac": post_remote,
+        "breaker_opens": int(eng.stats["breaker_opens"] - opens0) / iters,
+        "breaker_open_ticks":
+            int(eng.stats["breaker_open_ticks"] - ticks0) / iters,
+        "esc_retries": int(eng.stats["esc_retries"] - retries0) / iters,
+        "stream_compiled_shapes": int(eng.stats["stream_compiles"]),
+    }
+
+
+def run_chaos_smoke() -> dict:
+    """CI chaos gate (``--chaos-smoke``): replay the smoke trace under
+    seeded loss / outage / jitter schedules with PER-TICK pool invariants
+    (``validate=True``) and assert the no-corruption property — every
+    request terminates with exactly one valid-status record, S answers are
+    token-identical to the fault-free run, degraded requests answer with
+    their S tokens, no page leaks, one compiled shape.  Exits nonzero (via
+    AssertionError) on any violation."""
+    cfg = ARCHS[ARCH].reduced()
+    eng = build_engine(cfg, HIConfig(theta=0.6, capacity_factor=1.0),
+                       max_new_tokens=4, cache_len=CACHE_LEN)
+    reqs = _poisson_mixed_requests(cfg, 8, 4)
+    kw = dict(buckets=STREAM_BUCKETS, num_slots=4, l_slots=2,
+              page_size=PAGE_SIZE, validate=True)
+    ref = eng.serve_stream(reqs, **kw)
+    schedules = [
+        ("loss", FaultSchedule(seed=1, loss_prob=1.0),
+         RetryPolicy(ack_timeout_ticks=1, max_retries=1)),
+        ("outage", FaultSchedule(seed=2, outages=((1, 5),)),
+         RetryPolicy(ack_timeout_ticks=2, max_retries=1,
+                     breaker_threshold=2, breaker_cooldown_ticks=4)),
+        ("jitter", FaultSchedule(seed=3, delay_ticks=1, delay_jitter=2),
+         RetryPolicy(ack_timeout_ticks=6)),
+    ]
+    summary = {}
+    for name, faults, retry in schedules:
+        out = eng.serve_stream(reqs, faults=faults, retry=retry, **kw)
+        assert set(out) == {r.request_id for r in reqs}, name
+        for rid, rec in out.items():
+            assert rec["status"] in STATUSES, (name, rid, rec["status"])
+            np.testing.assert_array_equal(rec["s_tokens"],
+                                          ref[rid]["s_tokens"])
+            if not rec["offloaded"] or rec["served_remote"]:
+                np.testing.assert_array_equal(rec["tokens"],
+                                              ref[rid]["tokens"])
+            else:
+                np.testing.assert_array_equal(rec["tokens"],
+                                              rec["s_tokens"])
+        sched = eng._stream[1]
+        sched.srt.pool.check_invariants()
+        sched.lrt.pool.check_invariants()
+        assert not sched.srt.pool.held_slots, name
+        assert not sched.lrt.pool.held_slots, name
+        counts = {}
+        for rec in out.values():
+            counts[rec["status"]] = counts.get(rec["status"], 0) + 1
+        summary[name] = counts
+    assert eng.stats["stream_compiles"] == 1, "faults changed compiled shapes"
+    summary["stream_compiled_shapes"] = 1
+    emit("serving_chaos_smoke", 0.0,
+         "chaos gate PASS: " + "; ".join(
+             f"{k} {v}" for k, v in summary.items() if isinstance(v, dict)))
+    return summary
+
+
 def _calibrate_theta(eng, reqs, quantile: float = 0.25) -> float:
     """Paper §4 theta* calibration, serving-style: probe the S-tier's
     confidence distribution on the actual traffic through ``eng`` (theta is
@@ -455,6 +609,9 @@ def run(out_path: str = "BENCH_serving.json", smoke: bool = False) -> dict:
     # -- fused speculative S->L cascade vs plain scheduling -----------------
     speculative = _bench_speculative(cfg, reqs, theta, iters)
 
+    # -- L-tier outage: breaker -> fail-local -> recovery -------------------
+    outage = _bench_outage(cfg, reqs, iters)
+
     result = {
         "arch": ARCH,
         "requests": REQUESTS,
@@ -489,6 +646,7 @@ def run(out_path: str = "BENCH_serving.json", smoke: bool = False) -> dict:
         "repeated_prefix": repeated,
         "long_prompt": long_prompt,
         "speculative": speculative,
+        "outage": outage,
         "smoke": smoke,
         "backend": jax.default_backend(),
     }
@@ -528,6 +686,17 @@ def run(out_path: str = "BENCH_serving.json", smoke: bool = False) -> dict:
          f"({sp['speculative_speedup']:.2f}x); accept rate "
          f"{sp['draft_accept_rate']:.2f}, escalated-block frac "
          f"{sp['escalated_block_frac']:.2f}")
+    ot = outage
+    emit("serving_outage", 0.0,
+         f"L outage ticks {ot['outage_window_ticks']}: "
+         f"{ot['outage_rps']:.1f} req/s vs {ot['fault_free_rps']:.1f} "
+         f"fault-free ({ot['throughput_sustained_frac']:.2f}x sustained), "
+         f"{ot['degraded_local_frac']:.2f} degraded-local, remote serve "
+         f"{ot['remote_frac_outage']:.2f} vs {ot['remote_frac_fault_free']:.2f}"
+         f" fault-free, post-window escalations "
+         f"{ot['post_window_remote_frac'] if ot['post_window_remote_frac'] is not None else 'n/a'}"
+         f" remote ({ot['post_window_escalations']}), "
+         f"breaker opened {ot['breaker_opens']:.0f}x")
     return result
 
 
@@ -536,8 +705,15 @@ def main():
     ap.add_argument("--out", default="BENCH_serving.json")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny workload, 1 iteration — the CI tier-1 mode")
+    ap.add_argument("--chaos-smoke", action="store_true",
+                    help="fault-injection gate: seeded loss/outage/jitter "
+                         "schedules with per-tick pool invariants; asserts "
+                         "the no-corruption property instead of timing")
     args = ap.parse_args()
-    r = run(args.out, smoke=args.smoke)
+    if args.chaos_smoke:
+        r = run_chaos_smoke()
+    else:
+        r = run(args.out, smoke=args.smoke)
     print(json.dumps(r, indent=2))
 
 

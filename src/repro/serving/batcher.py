@@ -120,6 +120,11 @@ class AdmittedRequest:
     page_hashes: Optional[Tuple[bytes, ...]] = None  # rolling chain, per page
     full_hash: Optional[bytes] = None   # chain extended over the partial tail
     submit_time: float = 0.0            # monotonic; drives the drop policy
+    admit_retries: int = 0              # fruitless admission ticks so far; the
+    #                                     scheduler rejects the request outright
+    #                                     past RetryPolicy.admit_retry_limit
+    #                                     (reset when the S->L escalation
+    #                                     re-enters L-tier admission)
 
 
 def _chain(prev: bytes, chunk: np.ndarray) -> bytes:

@@ -265,7 +265,9 @@ class HIEngine:
         self.stats: Dict[str, float] = {
             "requests": 0, "offloaded": 0, "dropped": 0,
             "serve_time": 0.0, "compiles": 0, "stream_compiles": 0,
-            "stream_ticks": 0, "prefill_tokens_saved": 0}
+            "stream_ticks": 0, "prefill_tokens_saved": 0,
+            "degraded_local": 0, "rejected": 0, "breaker_open_ticks": 0,
+            "breaker_opens": 0, "esc_retries": 0, "esc_lost": 0}
 
     # -- executable cache ---------------------------------------------------
 
@@ -404,7 +406,8 @@ class HIEngine:
                      admit_width: int = None, decode_block: int = 4,
                      prefix_sharing: bool = True, prefix_entries: int = None,
                      chunk_prefill: bool = False, chunk_size: int = 8,
-                     chunk_width: int = 2, speculative: bool = False
+                     chunk_width: int = 2, speculative: bool = False,
+                     faults=None, retry=None, validate: bool = False
                      ) -> Dict[int, Dict[str, np.ndarray]]:
         """Continuous-batching entry point: serve ``requests`` (an iterable of
         ``batcher.Request``) through slot-level admission over the paged KV
@@ -447,6 +450,24 @@ class HIEngine:
         temperature raises NotImplementedError (rejection sampling is future
         work).
 
+        Failure semantics: ``faults`` (a ``serving.faults.FaultSchedule``)
+        injects deterministic, seeded ED↔ES transport faults — escalation
+        delivery delay, loss, L-tier outage windows, latency spikes — and
+        ``retry`` (a ``serving.faults.RetryPolicy``) sets the resilience
+        knobs: capped exponential backoff for lost/timed-out escalations, the
+        consecutive-failure circuit breaker (closed → open → half-open; open
+        = FAIL-LOCAL: the L queue pauses and the gate's traced theta operand
+        drops to ``FAIL_LOCAL_THETA`` so nothing offloads — no recompile),
+        and the admission retry cap.  Every record carries ``status`` ∈
+        {``ok``, ``degraded_local``, ``dropped``, ``rejected``} plus
+        ``escalation_retries`` / ``queue_wait_ticks`` / ``esc_created_tick``
+        (-1 = never escalated; the outage bench slices the trace into
+        during/after-window phases with it); degradation NEVER
+        changes compiled shapes (``stats['stream_compiles']`` stays 1 under
+        any schedule — fault state is per-run, not part of the scheduler
+        cache key).  ``validate=True`` asserts ``KVPool.check_invariants``
+        on both tiers after every tick (chaos tests).
+
         Returns per-request result records keyed by request_id.
         """
         from repro.serving.batcher import AdmissionQueue
@@ -483,6 +504,10 @@ class HIEngine:
             self.stats["stream_compiles"] += sched.stats["compiles"]
         sched = self._stream[1]
         sched.set_default_temperature(self.temperature)
+        from repro.serving.faults import NO_FAULTS, RetryPolicy
+        sched.set_faults(faults if faults is not None else NO_FAULTS,
+                         retry if retry is not None else RetryPolicy(),
+                         validate)
         queue = AdmissionQueue(buckets=buckets,
                                page_size=page_size if prefix_sharing else None)
         for r in requests:
@@ -498,6 +523,10 @@ class HIEngine:
         sched.stats["offloaded"] = 0
         self.stats["dropped"] += sched.stats["dropped"]
         sched.stats["dropped"] = 0
+        for k in ("degraded_local", "rejected", "breaker_open_ticks",
+                  "breaker_opens", "esc_retries", "esc_lost"):
+            self.stats[k] += sched.stats[k]
+            sched.stats[k] = 0
         self.stats["prefill_tokens_saved"] += \
             sched.prefix_stats.get("tokens_saved", 0) - saved0
         self.stats["stream_ticks"] += sched.stats["ticks"] - ticks0

@@ -163,6 +163,14 @@ class KVPool:
     def free_pages(self) -> int:
         return len(self._free)
 
+    @property
+    def held_slots(self) -> List[int]:
+        """Slots currently holding pages — empty after a clean drain.  The
+        fault-path tests assert this: every abandoned escalation (lost,
+        expired, outage-aborted, or in flight when the run drains) must have
+        released its pages through ``free``/``retract``."""
+        return sorted(self._slot_pages)
+
     def pages_needed(self, context_len: int) -> int:
         return -(-context_len // self.page_size)        # ceil div
 

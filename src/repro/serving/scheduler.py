@@ -69,6 +69,41 @@ flagged.  (Speculative mode has no L queue: every request is admitted to
 BOTH tiers at the same slot index, and escalation happens per token block
 inside the tick.)
 
+Failure semantics (``serving/faults.py``)
+-----------------------------------------
+The S→L escalation now crosses a simulated ED↔ES transport
+(:class:`~repro.serving.faults.EscalationLink`, driven by a seeded
+:class:`~repro.serving.faults.FaultSchedule` set via :meth:`set_faults`)
+instead of being appended directly to the L queue.  All of it is HOST-side:
+fault injection, retries, and degradation change per-tick operand VALUES
+only, never a compiled shape — ``stats['compiles']`` stays at 1 with any
+fault schedule (empty ticks that merely advance timers dispatch the same
+executable with every lane cond-skipped).
+
+* Every request terminates with exactly ONE result record carrying one of
+  the :data:`~repro.serving.faults.STATUSES`: ``ok`` (served locally or
+  remotely), ``degraded_local`` (the escalation failed — loss/timeout
+  retries exhausted, budget expiry during retry, L outage, open breaker, or
+  L admission starvation — and the S answer stands), ``dropped``
+  (arXiv:2112.11413 budget expiry in the L queue), or ``rejected``
+  (admission gave up: page demand unsatisfiable for
+  ``RetryPolicy.admit_retry_limit`` fruitless ticks — the bounded
+  replacement for the old "scheduler stalled" RuntimeError).
+* Lost / timed-out escalations retry with capped exponential backoff
+  (``RetryPolicy``); a retry whose ``latency_budget`` has already expired
+  gives up as ``degraded_local``.
+* A :class:`~repro.serving.faults.CircuitBreaker` watches consecutive L-path
+  failures: closed → open (FAIL-LOCAL: L admission paused, resends held, the
+  tick's theta OPERAND becomes ``FAIL_LOCAL_THETA`` so the gate stops
+  offloading — no recompile) → half-open (one probe escalation re-admitted;
+  success closes, failure re-opens).  ``stats['breaker_open_ticks']`` /
+  ``stats['breaker_opens']`` count it.
+* Leak-free cancellation: an escalation abandoned at ANY point (lost,
+  expired, outage-aborted mid-decode, or pending at drain) releases its
+  L-tier slot and KV pages through ``KVPool.free`` — ``check_invariants()``
+  holds after every tick (``validate=True``) and the pools' ``held_slots``
+  are empty after drain.
+
 Outputs are TOKEN-IDENTICAL to the drain path on the same bucketized
 prompts, for ANY ``admit_width``/``decode_block``, with prefix sharing ON or
 OFF and chunked prefill ON or OFF (the chunk lane's per-position math is the
@@ -101,6 +136,9 @@ from repro.core.confidence import confidence as _confidence
 from repro.models import model_zoo
 from repro.serving import sampler
 from repro.serving.batcher import AdmissionQueue, AdmittedRequest
+from repro.serving.faults import (NO_FAULTS, CircuitBreaker, Escalation,
+                                  EscalationLink, FaultSchedule,
+                                  FAIL_LOCAL_THETA, RetryPolicy)
 from repro.serving.kv_pool import AdmitPlan, KVPool
 
 
@@ -694,7 +732,19 @@ class ContinuousScheduler:
         self.stats: Dict[str, float] = {
             "requests": 0, "offloaded": 0, "dropped": 0, "ticks": 0,
             "compiles": 0, "serve_time": 0.0, "blocks": 0,
-            "escalated_blocks": 0, "drafted": 0, "accepted": 0}
+            "escalated_blocks": 0, "drafted": 0, "accepted": 0,
+            "degraded_local": 0, "rejected": 0, "breaker_open_ticks": 0,
+            "breaker_opens": 0, "esc_retries": 0, "esc_lost": 0}
+        # fault-injection state (host-side; set_faults replaces per run —
+        # never part of the compile key, so changing it never recompiles)
+        self.faults: FaultSchedule = NO_FAULTS
+        self.policy: RetryPolicy = RetryPolicy()
+        self.validate = False
+        self._link: Optional[EscalationLink] = None
+        self._breaker: Optional[CircuitBreaker] = None
+        self._esc_meta: Dict[int, Escalation] = {}
+        self._probe: Optional[int] = None
+        self._tick0 = 0
 
         s_role = "spec_s" if speculative else "plain"
         l_role = "spec_l" if speculative else "plain"
@@ -741,6 +791,26 @@ class ContinuousScheduler:
                 spec(self.lrt.pool_operand())).compile()
         self.stats["compiles"] += 1
 
+    def set_faults(self, faults: Optional[FaultSchedule] = None,
+                   policy: Optional[RetryPolicy] = None,
+                   validate: Optional[bool] = None) -> None:
+        """Install the fault schedule / retry policy / per-tick invariant
+        checking for subsequent ``run`` calls.  Host-side only: the compiled
+        tick executable is untouched (fault windows are RUN-relative ticks —
+        each ``run`` re-anchors tick 0, so a schedule replays identically on
+        a reused scheduler)."""
+        if faults is not None:
+            if self.speculative and faults.active:
+                raise ValueError(
+                    "fault injection models the S->L escalation QUEUE; "
+                    "speculative mode has no L queue (escalation is fused "
+                    "into the tick)")
+            self.faults = faults
+        if policy is not None:
+            self.policy = policy
+        if validate is not None:
+            self.validate = bool(validate)
+
     def set_default_temperature(self, temperature: float) -> None:
         """Engine-level sampling temperature used for requests that don't set
         their own (Request.temperature > 0 wins) — keeps ``serve_stream``
@@ -784,8 +854,15 @@ class ContinuousScheduler:
             ) -> Dict[int, Dict[str, Any]]:
         """Drain ``queue`` through the slots; returns per-request records
         keyed by request_id: tokens / s_tokens / confidence / offloaded /
-        served_remote / dropped / ttft (mirroring ``HIEngine.serve``'s
-        fields, plus the speculative block accounting when enabled)."""
+        served_remote / dropped / status / escalation_retries /
+        queue_wait_ticks / ttft (mirroring ``HIEngine.serve``'s fields, plus
+        the speculative block accounting when enabled).  Every submitted
+        request terminates with exactly one record whose ``status`` is one of
+        ``faults.STATUSES`` — under ANY fault schedule installed via
+        :meth:`set_faults`.  Ticks that only advance host-side timers
+        (backoff, breaker cooldown, fault windows, admission retries)
+        dispatch the same compiled executable with every lane skipped, so
+        ``stats['compiles']`` stays at 1."""
         theta = float(self.hi.theta if theta is None else theta)
         theta_j = jnp.asarray(theta, jnp.float32)
         results: Dict[int, Dict[str, Any]] = {}
@@ -793,59 +870,236 @@ class ContinuousScheduler:
 
         if self.speculative:
             while len(queue) or self.srt.busy:
-                self._try_admit_spec(queue)
-                if not self.srt.admitted and not self.srt.busy:
-                    raise RuntimeError(
-                        "scheduler stalled: pool too small to admit a single "
-                        "request — raise num_pages / num_slots")
+                self._try_admit_spec(queue, results)
                 host = self._dispatch(theta_j)
                 self._absorb_spec(host, results)
             self.stats["serve_time"] += time.perf_counter() - t0
             return results
 
+        # per-run fault state: run-relative tick 0 anchors here, so a seeded
+        # FaultSchedule replays identically on a reused scheduler
+        theta_fail_j = jnp.asarray(FAIL_LOCAL_THETA, jnp.float32)
+        self._tick0 = int(self.stats["ticks"])
+        self._link = EscalationLink(self.faults, self.policy)
+        self._breaker = CircuitBreaker(self.policy)
+        self._esc_meta = {}
+        self._probe = None
+        stall, idle = self._stall_limit(), 0
         l_queue: deque = deque()
-        while len(queue) or l_queue or self.srt.busy or self.lrt.busy:
-            self._try_admit(self.srt, queue)
-            self._drop_expired(l_queue, results)
-            self._try_admit(self.lrt, l_queue)
-            if (not self.srt.admitted and not self.lrt.admitted
-                    and not self.srt.busy and not self.lrt.busy):
-                if not len(queue) and not l_queue:
-                    break               # everything left was dropped
-                raise RuntimeError(
-                    "scheduler stalled: pool too small to admit a single "
-                    "request — raise num_pages / num_slots")
-            host = self._dispatch(theta_j)
+        while (len(queue) or l_queue or self.srt.busy or self.lrt.busy
+               or self._link.pending):
+            cur = int(self.stats["ticks"]) - self._tick0
+            state = self._breaker.state_at(cur)
+            if state == CircuitBreaker.OPEN:
+                self.stats["breaker_open_ticks"] += 1
+            else:
+                if state == CircuitBreaker.CLOSED:
+                    self._probe = None
+            self._fault_tick(cur, l_queue, results)
+            self._try_admit(self.srt, queue,
+                            on_give_up=lambda adm: self._reject(adm, results))
+            self._drop_expired(l_queue, results, cur)
+            self._try_admit(self.lrt, l_queue, limit=self._l_admit_limit(cur),
+                            on_give_up=lambda adm: self._l_give_up(adm, cur,
+                                                                   results))
+            for slot in range(self.lrt.num_slots):
+                rec = self.lrt.slot_req[slot]
+                if rec is None:
+                    continue
+                esc = self._esc_meta.get(rec.adm.request.request_id)
+                if esc is not None and esc.l_admit_tick < 0:
+                    esc.l_admit_tick = cur
+                    if self._breaker.state == CircuitBreaker.HALF_OPEN \
+                            and self._probe is None:
+                        self._probe = esc.rid
+            if not (len(queue) or l_queue or self.srt.busy or self.lrt.busy
+                    or self._link.pending):
+                break                  # everything left resolved host-side
+            if (self.srt.busy or self.lrt.busy or self.srt.admitted
+                    or self.lrt.admitted):
+                idle = 0
+            else:
+                # a pure timer tick: backoff / cooldown / fault window /
+                # admission retry.  Legitimate and bounded — the limit only
+                # trips on a genuinely unbounded schedule or policy.
+                idle += 1
+                if idle > stall:
+                    raise RuntimeError(
+                        f"scheduler stalled: {idle} consecutive idle ticks "
+                        f"with work pending (queue={len(queue)}, "
+                        f"l_queue={len(l_queue)}, "
+                        f"in_flight={self._link.pending})")
+            open_now = self._breaker.state == CircuitBreaker.OPEN
+            host = self._dispatch(theta_fail_j if open_now else theta_j)
             self._absorb(self.srt, host["s"],
-                         lambda rec: self._finish_s(rec, theta, l_queue,
-                                                    results))
+                         lambda rec: self._finish_s(rec, theta, results))
             self._absorb(self.lrt, host["l"],
                          lambda rec: self._finish_l(rec, results))
+            if self.validate:
+                self.srt.pool.check_invariants()
+                self.lrt.pool.check_invariants()
 
+        self.stats["esc_lost"] += self._link.lost
+        self.stats["breaker_opens"] += self._breaker.opens
         self.stats["serve_time"] += time.perf_counter() - t0
         return results
 
+    # -- fault machinery (host-side; see serving/faults.py) -----------------
+
+    def _stall_limit(self) -> int:
+        """Upper bound on CONSECUTIVE idle (timer-only) ticks any bounded
+        schedule + policy can produce; past it the run is genuinely stuck."""
+        p = self.policy
+        span = max([b for _, b in self.faults.outages + self.faults.spikes],
+                   default=0)
+        return (p.admit_retry_limit + p.breaker_cooldown_ticks
+                + (p.max_retries + 2) * (p.ack_timeout_ticks
+                                         + p.backoff_cap_ticks) + span + 64)
+
+    def _l_admit_limit(self, cur: int) -> Optional[int]:
+        """How many escalations L admission may take this tick: 0 while the
+        L tier is paused (outage / spike / open breaker), 1 while half-open
+        with no probe outstanding, unlimited when closed."""
+        if self.faults.l_paused(cur):
+            return 0
+        state = self._breaker.state
+        if state == CircuitBreaker.OPEN:
+            return 0
+        if state == CircuitBreaker.HALF_OPEN:
+            return 0 if self._probe is not None else 1
+        return None
+
+    def _fault_tick(self, cur: int, l_queue: deque, results: Dict) -> None:
+        """Advance the transport sim one tick: outage aborts first (busy L
+        slots release their pages through ``KVPool.free`` — leak-free — and
+        queued escalations fail), then arrivals / ack timeouts, then due
+        resends (held while the breaker is open)."""
+        link = self._link
+        if self.faults.in_outage(cur):
+            for slot in range(self.lrt.num_slots):
+                if self.lrt.slot_req[slot] is not None:
+                    rec = self.lrt.release(slot)
+                    self._esc_failed(
+                        self._esc_meta[rec.adm.request.request_id], cur,
+                        results)
+            while l_queue:
+                adm = l_queue.popleft()
+                self._esc_failed(self._esc_meta[adm.request.request_id],
+                                 cur, results)
+        arrived, failed = link.step(cur)
+        for esc in arrived:
+            l_queue.append(esc.adm)
+        for esc in failed:
+            self._esc_failed(esc, cur, results)
+        if self._breaker.state != CircuitBreaker.OPEN:
+            for esc in link.due_resends(cur):
+                link.take(esc)
+                if self._budget_expired(esc.adm):
+                    self._degrade(esc, cur, results)  # too late to retry
+                else:
+                    link.send(esc, cur)
+
+    @staticmethod
+    def _budget_expired(adm: AdmittedRequest) -> bool:
+        budget = adm.request.latency_budget
+        return (budget is not None
+                and time.monotonic() - adm.submit_time > budget)
+
+    def _esc_failed(self, esc, cur: int, results: Dict) -> None:
+        """One escalation attempt failed (lost, timed out, or outage-
+        aborted): count it against the breaker, then retry with capped
+        exponential backoff — or give up when retries are exhausted or the
+        latency budget says the answer would arrive too late."""
+        self._breaker.record_failure(cur)
+        if self._probe == esc.rid:
+            self._probe = None
+        if esc.attempt >= self.policy.max_retries \
+                or self._budget_expired(esc.adm):
+            self._degrade(esc, cur, results)
+        else:
+            self._link.schedule_retry(esc, cur)
+            self.stats["esc_retries"] += 1
+
+    def _degrade(self, esc, cur: int, results: Dict) -> None:
+        """Give up on the escalation: the S-tier answer (already recorded)
+        stands, flagged ``status='degraded_local'``."""
+        self._esc_meta.pop(esc.rid, None)
+        self.stats["degraded_local"] += 1
+        rec = results[esc.rid]
+        rec["status"] = "degraded_local"
+        rec["escalation_retries"] = esc.attempt
+        rec["queue_wait_ticks"] = max(cur - esc.created_tick, 0)
+
+    def _l_give_up(self, adm: AdmittedRequest, cur: int,
+                   results: Dict) -> None:
+        """L-tier admission starvation past the retry cap: the S answer
+        exists, so degrade rather than reject."""
+        esc = self._esc_meta.get(adm.request.request_id)
+        if esc is not None:
+            self._degrade(esc, cur, results)
+
+    def _reject(self, adm: AdmittedRequest, results: Dict) -> None:
+        """Bounded admission backpressure: after ``admit_retry_limit``
+        fruitless ticks the request fails outright with
+        ``status='rejected'`` — the bounded replacement for the old
+        "scheduler stalled" RuntimeError, which an unsatisfiable page demand
+        (prompt larger than the whole pool) used to hit."""
+        self.stats["requests"] += 1
+        self.stats["rejected"] += 1
+        warnings.warn(
+            f"request {adm.request.request_id} rejected: admission failed "
+            f"{adm.admit_retries} ticks running (bucket {adm.bucket} needs "
+            "more free pages than the pool can produce) — raise num_pages / "
+            "num_slots or shrink the prompt", RuntimeWarning, stacklevel=3)
+        results[adm.request.request_id] = {
+            "tokens": np.zeros((0,), np.int32),
+            "s_tokens": np.zeros((0,), np.int32),
+            "confidence": 0.0,
+            "offloaded": False,
+            "served_remote": False,
+            "dropped": False,
+            "status": "rejected",
+            "escalation_retries": 0,
+            "queue_wait_ticks": 0,
+            "esc_created_tick": -1,
+            "ttft": float("nan"),
+        }
+
     # -- admission / completion -------------------------------------------
 
-    def _try_admit(self, rt: _TierRuntime, queue) -> None:
+    def _try_admit(self, rt: _TierRuntime, queue, limit: Optional[int] = None,
+                   on_give_up=None) -> None:
         """Admit up to ``admit_width`` queued requests into free slots.
         ``queue`` is the AdmissionQueue (S tier) or the escalation deque
-        (L tier); both speak the same popleft/appendleft head interface."""
+        (L tier); both speak the same popleft/appendleft head interface.
+        ``limit`` caps this tick's admissions (0 = the L tier is paused —
+        outage / spike / open breaker; 1 = the half-open probe).  A request
+        that keeps failing admission hands off to ``on_give_up`` after
+        ``RetryPolicy.admit_retry_limit`` fruitless ticks instead of
+        re-queueing forever (bounded backpressure)."""
         rt.admitted = []
         rt.plans = []
+        if limit == 0:
+            return
         tick = int(self.stats["ticks"])
+        cap = rt.admit_width if limit is None else min(rt.admit_width, limit)
         admitted = 0
-        while admitted < rt.admit_width and len(queue):
+        while admitted < cap and len(queue):
             if rt.free_slot() is None:
                 break
             adm = queue.popleft()
             steps = min(adm.request.max_new_tokens, self.max_new_tokens)
             if not rt.admit(adm, steps, self.decode_block, tick):
+                adm.admit_retries += 1
+                if on_give_up is not None and \
+                        adm.admit_retries > self.policy.admit_retry_limit:
+                    on_give_up(adm)     # head cleared: try the next request
+                    continue
                 queue.appendleft(adm)   # no pages this tick: retry next tick
                 break
             admitted += 1
 
-    def _try_admit_spec(self, queue) -> None:
+    def _try_admit_spec(self, queue, results: Dict) -> None:
         """Speculative admission: both tiers claim the SAME slot index for a
         request (strict pairing — the verify chunk addresses the L pool by
         the S slot's id), prefill both caches through their admit lanes."""
@@ -862,6 +1116,10 @@ class ContinuousScheduler:
             adm = queue.popleft()
             steps = min(adm.request.max_new_tokens, self.max_new_tokens)
             if not srt.admit(adm, steps, self.decode_block, tick):
+                adm.admit_retries += 1
+                if adm.admit_retries > self.policy.admit_retry_limit:
+                    self._reject(adm, results)
+                    continue
                 queue.appendleft(adm)
                 break
             if not lrt.admit(adm, steps, self.decode_block, tick):
@@ -876,14 +1134,24 @@ class ContinuousScheduler:
                     srt.pool.retract(slot, adm.page_hashes, adm.full_hash,
                                      tick)
                 srt.release(slot)
+                adm.admit_retries += 1
+                if adm.admit_retries > self.policy.admit_retry_limit:
+                    self._reject(adm, results)
+                    continue
                 queue.appendleft(adm)
                 break
             admitted += 1
 
-    def _drop_expired(self, l_queue: deque, results: Dict) -> None:
+    def _drop_expired(self, l_queue: deque, results: Dict,
+                      cur: int = 0) -> None:
         """arXiv:2112.11413 drop policy: an escalation whose request has
         outlived its latency budget is dropped from the L queue — the S-tier
-        answer (already recorded) stands, flagged ``dropped``."""
+        answer (already recorded) stands, flagged ``dropped``.  Nothing else
+        to release: the L-tier prefix lookup and page claim both happen at
+        ADMISSION (``rt.admit``), so a QUEUED escalation holds no L-side
+        resources — the drop touches the record and counters only
+        (tests/test_faults.py asserts pool invariants under repeated
+        drops)."""
         if not l_queue:
             return
         now = time.monotonic()
@@ -893,9 +1161,15 @@ class ContinuousScheduler:
             budget = adm.request.latency_budget
             if budget is not None and now - adm.submit_time > budget:
                 self.stats["dropped"] += 1
+                esc = self._esc_meta.pop(adm.request.request_id, None)
                 rec = results.get(adm.request.request_id)
                 if rec is not None:
                     rec["dropped"] = True
+                    rec["status"] = "dropped"
+                    if esc is not None:
+                        rec["escalation_retries"] = esc.attempt
+                        rec["queue_wait_ticks"] = max(
+                            cur - esc.created_tick, 0)
             else:
                 kept.append(adm)
         l_queue.extend(kept)
@@ -977,8 +1251,12 @@ class ContinuousScheduler:
                 self._finish_spec(srt.release(slot), results)
                 lrt.release(slot)
 
-    def _finish_s(self, rec: _Active, theta: float, l_queue: deque,
-                  results: Dict) -> None:
+    def _finish_s(self, rec: _Active, theta: float, results: Dict) -> None:
+        """S decode finished: record the local answer, and when the gate
+        fires send the escalation across the (possibly faulty) ED↔ES link.
+        ``offloaded`` records INTENT (``conf < theta`` with the REAL theta)
+        even in fail-local mode — the degradation is visible in ``status``,
+        not hidden by a rewritten gate decision."""
         conf = float(np.mean(np.asarray(rec.confs, np.float32)))
         rid = rec.adm.request.request_id
         self.stats["requests"] += 1
@@ -989,16 +1267,43 @@ class ContinuousScheduler:
             "offloaded": conf < theta,
             "served_remote": False,
             "dropped": False,
+            "status": "ok",
+            "escalation_retries": 0,
+            "queue_wait_ticks": 0,
+            "esc_created_tick": -1,      # -1 = never escalated
             "ttft": rec.ttft,
         }
-        if conf < theta:
-            self.stats["offloaded"] += 1
-            l_queue.append(rec.adm)
+        if conf >= theta:
+            return
+        self.stats["offloaded"] += 1
+        cur = int(self.stats["ticks"]) - self._tick0
+        results[rid]["esc_created_tick"] = cur
+        esc = Escalation(rec.adm, rid, cur)
+        if self._breaker.state == CircuitBreaker.OPEN:
+            # fail-local: the breaker is open, nothing crosses the link —
+            # the request degrades immediately (no retries to burn)
+            self._degrade(esc, cur, results)
+            return
+        rec.adm.admit_retries = 0   # L admission gets a fresh retry budget
+        self._esc_meta[rid] = esc
+        self._link.send(esc, cur)
 
     def _finish_l(self, rec: _Active, results: Dict) -> None:
         rid = rec.adm.request.request_id
-        results[rid]["tokens"] = np.asarray(rec.tokens, np.int32)
-        results[rid]["served_remote"] = True
+        out = results[rid]
+        out["tokens"] = np.asarray(rec.tokens, np.int32)
+        out["served_remote"] = True
+        out["status"] = "ok"
+        esc = self._esc_meta.pop(rid, None)
+        if esc is not None:
+            cur = int(self.stats["ticks"]) - self._tick0
+            out["escalation_retries"] = esc.attempt
+            out["queue_wait_ticks"] = max(
+                (esc.l_admit_tick if esc.l_admit_tick >= 0 else cur)
+                - esc.created_tick, 0)
+            self._breaker.record_success()
+            if self._probe == rid:
+                self._probe = None
 
     def _finish_spec(self, rec: _Active, results: Dict) -> None:
         rid = rec.adm.request.request_id
@@ -1014,6 +1319,10 @@ class ContinuousScheduler:
             "offloaded": escalated > 0,
             "served_remote": False,
             "dropped": False,
+            "status": "ok",
+            "escalation_retries": 0,
+            "queue_wait_ticks": 0,
+            "esc_created_tick": -1,      # the fused cascade has no L queue
             "ttft": rec.ttft,
             "rounds": list(rec.rounds),
             "blocks": len(rec.rounds),

@@ -1,0 +1,143 @@
+"""Chaos property: under ANY seeded FaultSchedule, serving degrades but
+never corrupts.
+
+One engine (ONE compiled tick executable) is hammered with randomly drawn
+fault schedules — loss, delay, jitter, L-tier outages, latency spikes — over
+mixed Poisson-style traffic, with per-tick ``KVPool.check_invariants``
+enabled.  Invariants checked per example:
+
+* every submitted request terminates with EXACTLY ONE record whose
+  ``status`` is a member of ``faults.STATUSES``;
+* the S-tier answer is sacred: ``s_tokens`` are token-identical to the
+  fault-free run for every served request, and requests that never wanted
+  escalation (``offloaded`` False) return fault-free-identical ``tokens``;
+* degraded requests answer with their S tokens (never a truncated L reply);
+* zero page leaks: both pools pass invariants and hold no slots after the
+  drain, so schedules that abort mid-flight L work release every page;
+* ``stream_compiles`` stays 1 — fault handling is host-side only and can
+  never change a compiled shape.
+
+The property runs twice over: a FIXED seeded sweep (always on, so tier-1
+CI exercises it without extra deps) and a hypothesis ``@given`` search when
+hypothesis is installed (same body, wider schedule space).
+"""
+import numpy as np
+import pytest
+
+from repro.configs.base import HIConfig
+from repro.configs.registry import ARCHS
+from repro.serving.batcher import Request
+from repro.serving.engine import build_engine
+from repro.serving.faults import STATUSES, FaultSchedule, RetryPolicy
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+    settings.register_profile("chaos", max_examples=6, deadline=None)
+    settings.load_profile("chaos")
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+STEPS = 3
+KW = dict(buckets=(8, 16), num_slots=3, l_slots=2, page_size=8)
+
+_STATE = {}                      # engine + fault-free reference, built once
+
+
+def _requests():
+    """Mixed traffic: two buckets, Poisson-ish lengths, a zero-budget
+    straggler (always drops if it tries to escalate)."""
+    rng = np.random.default_rng(42)
+    reqs = []
+    for i in range(7):
+        n = int(rng.integers(4, 16))
+        budget = 0.0 if i == 5 else None
+        reqs.append(Request(i, rng.integers(0, 500, n).astype(np.int32),
+                            max_new_tokens=STEPS, latency_budget=budget))
+    return reqs
+
+
+def _state():
+    if not _STATE:
+        cfg = ARCHS["qwen2-1.5b"].reduced()
+        # theta 0.6: a real S/L split — some requests escalate, some don't
+        eng = build_engine(cfg, HIConfig(theta=0.6, capacity_factor=1.0),
+                           max_new_tokens=STEPS, cache_len=32)
+        ref = eng.serve_stream(_requests(), validate=True, **KW)
+        _STATE.update(eng=eng, ref=ref)
+    return _STATE["eng"], _STATE["ref"]
+
+
+def _check(seed, loss, delay, jitter, out_start, out_len, spike_start,
+           spike_len):
+    eng, ref = _state()
+    faults = FaultSchedule(
+        seed=seed, loss_prob=loss, delay_ticks=delay, delay_jitter=jitter,
+        outages=((out_start, out_start + out_len),) if out_len else (),
+        spikes=((spike_start, spike_start + spike_len),) if spike_len else ())
+    retry = RetryPolicy(ack_timeout_ticks=2, max_retries=2,
+                        backoff_cap_ticks=4, breaker_threshold=2,
+                        breaker_cooldown_ticks=4)
+    reqs = _requests()
+    out = eng.serve_stream(reqs, validate=True, faults=faults, retry=retry,
+                           **KW)
+
+    # exactly one terminal record per request, with a valid status
+    assert set(out) == {r.request_id for r in reqs}
+    for rid, rec in out.items():
+        assert rec["status"] in STATUSES
+        assert rec["status"] != "rejected"      # pool is adequate here
+        np.testing.assert_array_equal(rec["s_tokens"], ref[rid]["s_tokens"])
+        if not rec["offloaded"]:
+            # never wanted escalation: faults must be invisible
+            assert rec["status"] == "ok" and not rec["served_remote"]
+            np.testing.assert_array_equal(rec["tokens"], ref[rid]["tokens"])
+        elif rec["status"] == "ok" and rec["served_remote"]:
+            np.testing.assert_array_equal(rec["tokens"], ref[rid]["tokens"])
+        else:
+            # degraded_local / dropped: the S answer stands, never truncated
+            assert rec["status"] in ("degraded_local", "dropped")
+            np.testing.assert_array_equal(rec["tokens"], rec["s_tokens"])
+
+    # zero leaks after the drain (validate=True already checked every tick)
+    sched = eng._stream[1]
+    sched.srt.pool.check_invariants()
+    sched.lrt.pool.check_invariants()
+    assert sched.srt.pool.held_slots == []
+    assert sched.lrt.pool.held_slots == []
+    # host-side faults can never grow the compiled-shape set
+    assert eng.stats["stream_compiles"] == 1
+
+
+# fixed sweep: loss-only, delay-only, outage, spike, everything at once
+SWEEP = [
+    (1, 1.0, 0, 0, 0, 0, 0, 0),
+    (2, 0.0, 2, 2, 0, 0, 0, 0),
+    (3, 0.0, 0, 0, 1, 6, 0, 0),
+    (4, 0.0, 0, 0, 0, 0, 2, 5),
+    (5, 0.25, 1, 2, 2, 4, 7, 3),
+]
+
+
+@pytest.mark.parametrize("params", SWEEP, ids=lambda p: f"seed{p[0]}")
+def test_chaos_never_corrupts_seeded(params):
+    _check(*params)
+
+
+if HAVE_HYPOTHESIS:
+    @given(
+        seed=st.integers(0, 2**16),
+        loss=st.sampled_from([0.0, 0.25, 1.0]),
+        delay=st.integers(0, 2),
+        jitter=st.integers(0, 2),
+        out_start=st.integers(0, 10),
+        out_len=st.integers(0, 8),
+        spike_start=st.integers(0, 10),
+        spike_len=st.integers(0, 6),
+    )
+    @settings(max_examples=6)   # each example replays the full stream
+    def test_chaos_never_corrupts_hypothesis(seed, loss, delay, jitter,
+                                             out_start, out_len, spike_start,
+                                             spike_len):
+        _check(seed, loss, delay, jitter, out_start, out_len, spike_start,
+               spike_len)
