@@ -53,10 +53,22 @@ vs without the outage (throughput sustained), the degraded-local fraction,
 the S-vs-L serve mix against the fault-free run (recovery of the offload
 rate), and breaker open/close counts.
 
+The TELEMETRY scenario measures the collector's cost on the calibrated
+mixed trace: req/s with the span/phase/histogram collector ON vs OFF (the
+acceptance budget is <2% overhead; disabled costs nothing — the scheduler's
+hooks are ``if self.tel`` guards on the host side of an already host-bound
+tick loop), plus the latency histograms (TTFT/TPOT/queue-wait/escalation
+p50/p95/p99) from an instrumented pass.  ``--trace-out PATH`` additionally
+exports that pass as Chrome trace_event JSON — one track per slot per tier
+with S→L flow arrows — loadable in chrome://tracing or Perfetto.
+
   PYTHONPATH=src python -m benchmarks.bench_serving [--out BENCH_serving.json]
   PYTHONPATH=src python -m benchmarks.bench_serving --smoke        # CI tier-1
+  PYTHONPATH=src python -m benchmarks.bench_serving --smoke --trace-out t.json
   PYTHONPATH=src python -m benchmarks.bench_serving --chaos-smoke  # CI chaos
                     # gate: seeded fault schedules + per-tick pool invariants
+  PYTHONPATH=src python -m benchmarks.bench_serving --telemetry-smoke
+                    # gate: span completeness + <2% instrumented overhead
 """
 from __future__ import annotations
 
@@ -76,6 +88,8 @@ from repro.models import model_zoo
 from repro.serving.batcher import Batcher, Request, pad_to_bucket
 from repro.serving.engine import build_engine
 from repro.serving.faults import STATUSES, FaultSchedule, RetryPolicy
+from repro.serving.telemetry import Telemetry
+from repro.serving.trace_export import chrome_trace, write_chrome_trace
 
 ARCH = "qwen2-1.5b"
 REQUESTS = 32
@@ -455,6 +469,96 @@ def _bench_outage(cfg, reqs, iters: int):
     }
 
 
+def _bench_telemetry(cfg, reqs, theta: float, iters: int, decode_block: int,
+                     trace_out: str | None = None):
+    """Telemetry overhead on the calibrated mixed trace: req/s with the
+    collector ON vs OFF (min-of-N, same engine, same compiled tick), plus
+    the latency histograms from an instrumented pass and — when
+    ``trace_out`` is given — the Chrome trace_event export of that pass."""
+    hi = HIConfig(theta=theta, capacity_factor=1.0)
+    eng = build_engine(cfg, hi, max_new_tokens=MAX_NEW, cache_len=CACHE_LEN)
+    kw = dict(buckets=STREAM_BUCKETS, num_slots=NUM_SLOTS,
+              l_slots=NUM_SLOTS // 2, page_size=PAGE_SIZE,
+              decode_block=decode_block)
+    eng.serve_stream(reqs, **kw)               # warm the tick executable
+
+    def best(tel_factory):
+        times = []
+        for _ in range(iters):
+            tel = tel_factory()
+            t0 = time.perf_counter()
+            eng.serve_stream(reqs, telemetry=tel, **kw)
+            times.append(time.perf_counter() - t0)
+        return min(times)
+
+    t_off = best(lambda: None)
+    t_on = best(Telemetry)
+    # one final instrumented pass feeds the exporters (histograms + trace)
+    tel = Telemetry()
+    eng.serve_stream(reqs, telemetry=tel, **kw)
+    doc = write_chrome_trace(tel, trace_out) if trace_out \
+        else chrome_trace(tel)
+    return {
+        "requests": len(reqs),
+        "enabled_rps": len(reqs) / t_on,
+        "disabled_rps": len(reqs) / t_off,
+        "overhead_frac": max(0.0, t_on / t_off - 1.0),
+        "histograms": tel.histogram_summary(),
+        "tick_phase_seconds": tel.phase_summary(),
+        "trace_out": trace_out,
+        "trace_events": len(doc["traceEvents"]),
+        "stream_compiled_shapes": int(eng.stats["stream_compiles"]),
+    }
+
+
+def run_telemetry_smoke(trace_out: str | None = None) -> dict:
+    """CI telemetry gate (``--telemetry-smoke``): replay the smoke trace
+    with the collector ON and assert the zero-cost contract — one compiled
+    shape, a complete span tree per terminating request whose terminal
+    status matches the result record, token-identical output to the
+    uninstrumented run, and req/s within the 2% overhead budget.  Exits
+    nonzero (via AssertionError) on any violation."""
+    cfg = ARCHS[ARCH].reduced()
+    eng = build_engine(cfg, HIConfig(theta=0.6, capacity_factor=1.0),
+                       max_new_tokens=4, cache_len=CACHE_LEN)
+    reqs = _poisson_mixed_requests(cfg, 16, 4)
+    kw = dict(buckets=STREAM_BUCKETS, num_slots=4, l_slots=2,
+              page_size=PAGE_SIZE)
+    ref = eng.serve_stream(reqs, **kw)         # warm + reference tokens
+    tel = Telemetry()
+    out = eng.serve_stream(reqs, telemetry=tel, **kw)
+    assert eng.stats["stream_compiles"] == 1, "telemetry changed a shape"
+    assert set(tel.traces) == set(out), "span tree per terminating request"
+    for rid, rec in out.items():
+        tr = tel.traces[rid]
+        assert tr.complete, f"request {rid}: dangling span"
+        assert tr.status == rec["status"], f"request {rid}: status mismatch"
+        np.testing.assert_array_equal(rec["tokens"], ref[rid]["tokens"])
+
+    def best(tel_factory):
+        times = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            eng.serve_stream(reqs, telemetry=tel_factory(), **kw)
+            times.append(time.perf_counter() - t0)
+        return min(times)
+
+    t_off = best(lambda: None)
+    t_on = best(Telemetry)
+    overhead = max(0.0, t_on / t_off - 1.0)
+    assert overhead < 0.02, \
+        f"telemetry overhead {overhead:.2%} exceeds the 2% budget"
+    if trace_out:
+        write_chrome_trace(tel, trace_out)
+    emit("serving_telemetry_smoke", 0.0,
+         f"telemetry gate PASS: {len(out)} span trees, overhead "
+         f"{overhead:.2%} (< 2%), 1 compiled shape")
+    return {"requests": len(out), "overhead_frac": overhead,
+            "enabled_rps": len(reqs) / t_on,
+            "disabled_rps": len(reqs) / t_off,
+            "stream_compiled_shapes": 1, "trace_out": trace_out}
+
+
 def run_chaos_smoke() -> dict:
     """CI chaos gate (``--chaos-smoke``): replay the smoke trace under
     seeded loss / outage / jitter schedules with PER-TICK pool invariants
@@ -563,7 +667,8 @@ def _prefill_decode_split(cfg, bucket: int, iters: int = 10):
         med(decode, params, logits, cache)
 
 
-def run(out_path: str = "BENCH_serving.json", smoke: bool = False) -> dict:
+def run(out_path: str = "BENCH_serving.json", smoke: bool = False,
+        trace_out: str | None = None) -> dict:
     global REQUESTS, MAX_NEW
     iters = 1 if smoke else 5
     if smoke:
@@ -612,6 +717,10 @@ def run(out_path: str = "BENCH_serving.json", smoke: bool = False) -> dict:
     # -- L-tier outage: breaker -> fail-local -> recovery -------------------
     outage = _bench_outage(cfg, reqs, iters)
 
+    # -- telemetry collector: overhead on vs off + Chrome trace export ------
+    telemetry = _bench_telemetry(cfg, reqs, theta, iters, decode_block,
+                                 trace_out=trace_out)
+
     result = {
         "arch": ARCH,
         "requests": REQUESTS,
@@ -647,6 +756,7 @@ def run(out_path: str = "BENCH_serving.json", smoke: bool = False) -> dict:
         "long_prompt": long_prompt,
         "speculative": speculative,
         "outage": outage,
+        "telemetry": telemetry,
         "smoke": smoke,
         "backend": jax.default_backend(),
     }
@@ -697,6 +807,12 @@ def run(out_path: str = "BENCH_serving.json", smoke: bool = False) -> dict:
          f"{ot['post_window_remote_frac'] if ot['post_window_remote_frac'] is not None else 'n/a'}"
          f" remote ({ot['post_window_escalations']}), "
          f"breaker opened {ot['breaker_opens']:.0f}x")
+    tm = telemetry
+    emit("serving_telemetry", 0.0,
+         f"{tm['enabled_rps']:.1f} req/s instrumented vs "
+         f"{tm['disabled_rps']:.1f} off ({tm['overhead_frac']:.2%} "
+         f"overhead), {tm['trace_events']} trace events"
+         + (f" -> {tm['trace_out']}" if tm["trace_out"] else ""))
     return result
 
 
@@ -709,11 +825,20 @@ def main():
                     help="fault-injection gate: seeded loss/outage/jitter "
                          "schedules with per-tick pool invariants; asserts "
                          "the no-corruption property instead of timing")
+    ap.add_argument("--telemetry-smoke", action="store_true",
+                    help="telemetry gate: span-tree completeness, terminal "
+                         "statuses matching result records, one compiled "
+                         "shape, and req/s overhead under the 2%% budget")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the instrumented pass's Chrome trace_event "
+                         "JSON here (load in chrome://tracing or Perfetto)")
     args = ap.parse_args()
     if args.chaos_smoke:
         r = run_chaos_smoke()
+    elif args.telemetry_smoke:
+        r = run_telemetry_smoke(trace_out=args.trace_out)
     else:
-        r = run(args.out, smoke=args.smoke)
+        r = run(args.out, smoke=args.smoke, trace_out=args.trace_out)
     print(json.dumps(r, indent=2))
 
 

@@ -60,7 +60,7 @@ def run_case(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.size
-    t0 = time.time()
+    t0 = time.perf_counter()
     if hi:
         if not shape.is_decode:
             return {"arch": arch, "shape": shape_name,
@@ -77,12 +77,14 @@ def run_case(arch: str, shape_name: str, *, multi_pod: bool = False,
     with mesh:
         lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                           donate_argnums=donate).lower(*args)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # older jax returns [dict]
+        cost = cost[0] if cost else {}
     hlo_text = compiled.as_text()
 
     # loop-aware accounting (cost_analysis counts while bodies ONCE — with

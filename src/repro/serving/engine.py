@@ -89,6 +89,22 @@ generalises ``prefill_paged`` / ``decode_step_paged``:
 Either way the tick stays ONE AOT-compiled executable with ONE host sync —
 ``stats['stream_compiles']`` == 1 with everything enabled.
 
+Observability (``serving/telemetry.py``)
+----------------------------------------
+``serve_stream(..., telemetry=Telemetry())`` threads the serving telemetry
+collector through the scheduler: per-request span trees (``queued →
+admitted → prefill_chunk[i] → decode_block[j] → escalate_attempt[k] →
+l_verify → terminal``), per-tick phase buckets (``fault_tick /
+build_operands / dispatch / host_fetch / postprocess``) + pool gauges,
+streaming latency histograms, a Prometheus text snapshot, and Perfetto-
+loadable Chrome-trace export (``serving/trace_export.py``) — all host-side
+bookkeeping, so the compile and sync invariants above are untouched;
+disabled (the default) it costs one branch per hook.  ``HIEngine.stats``
+and ``ContinuousScheduler.stats`` are now dict VIEWS over the same typed
+counters (``telemetry.EngineStatsView`` reads the live scheduler's fields
+instead of copy-and-zeroing them), so the mirrored fault counters can
+never diverge.
+
 ``benchmarks/bench_serving.py`` measures this path against the legacy
 token-by-token loop (kept below as :func:`_decode_loop` + ``serve_legacy``)
 and the drained batch path under mixed-length Poisson traffic, and writes
@@ -115,6 +131,7 @@ from repro.core.confidence import confidence as _confidence
 from repro.core import router as router_mod
 from repro.models import model_zoo
 from repro.serving import sampler
+from repro.serving.telemetry import EngineCounters, EngineStatsView
 
 # The engine's single device→host sync point.  Kept as a module-level
 # indirection so tests can wrap it and count synchronisations per serve().
@@ -262,12 +279,12 @@ class HIEngine:
         self._exec: Dict[Tuple[int, int], list] = {}
         self._legacy = None
         self._stream = None          # (key, ContinuousScheduler) lazy cache
-        self.stats: Dict[str, float] = {
-            "requests": 0, "offloaded": 0, "dropped": 0,
-            "serve_time": 0.0, "compiles": 0, "stream_compiles": 0,
-            "stream_ticks": 0, "prefill_tokens_saved": 0,
-            "degraded_local": 0, "rejected": 0, "breaker_open_ticks": 0,
-            "breaker_opens": 0, "esc_retries": 0, "esc_lost": 0}
+        # ONE authority per counter: keys the continuous scheduler also
+        # counts are read LIVE through the view (engine total = retired base
+        # + attached scheduler), instead of the old copy-and-zero mirroring
+        # that kept two divergence-prone stores.  Dict API unchanged.
+        self.counters = EngineCounters()
+        self.stats: EngineStatsView = EngineStatsView(self.counters)
 
     # -- executable cache ---------------------------------------------------
 
@@ -407,8 +424,8 @@ class HIEngine:
                      prefix_sharing: bool = True, prefix_entries: int = None,
                      chunk_prefill: bool = False, chunk_size: int = 8,
                      chunk_width: int = 2, speculative: bool = False,
-                     faults=None, retry=None, validate: bool = False
-                     ) -> Dict[int, Dict[str, np.ndarray]]:
+                     faults=None, retry=None, validate: bool = False,
+                     telemetry=None) -> Dict[int, Dict[str, np.ndarray]]:
         """Continuous-batching entry point: serve ``requests`` (an iterable of
         ``batcher.Request``) through slot-level admission over the paged KV
         pools instead of drained (B, bucket) batches.
@@ -468,6 +485,17 @@ class HIEngine:
         cache key).  ``validate=True`` asserts ``KVPool.check_invariants``
         on both tiers after every tick (chaos tests).
 
+        ``telemetry`` (a ``serving.telemetry.Telemetry``) installs the
+        observability collector for this call: per-request span trees
+        (``queued → admitted → prefill_chunk[i] → decode_block[j] →
+        escalate_attempt[k] → l_verify → terminal``), per-tick phase timing
+        (``fault_tick / build_operands / dispatch / host_fetch /
+        postprocess``) and pool gauges — all host-side, so
+        ``stats['stream_compiles']`` and the one-sync-per-tick discipline
+        are unchanged; ``None`` (default) keeps the zero-overhead disabled
+        path.  Export via ``telemetry.prometheus_text()`` /
+        ``histogram_summary()`` or ``serving.trace_export.chrome_trace``.
+
         Returns per-request result records keyed by request_id.
         """
         from repro.serving.batcher import AdmissionQueue
@@ -503,7 +531,12 @@ class HIEngine:
             self._stream = (key, sched)
             self.stats["stream_compiles"] += sched.stats["compiles"]
         sched = self._stream[1]
+        # engine totals read the scheduler's typed counters LIVE through the
+        # view (attach folds a replaced scheduler's totals into the base
+        # first) — no per-key copy-and-zero, so the two can never diverge
+        self.stats.attach(sched)
         sched.set_default_temperature(self.temperature)
+        sched.set_telemetry(telemetry)
         from repro.serving.faults import NO_FAULTS, RetryPolicy
         sched.set_faults(faults if faults is not None else NO_FAULTS,
                          retry if retry is not None else RetryPolicy(),
@@ -514,24 +547,7 @@ class HIEngine:
             queue.submit(r)
         theta = (self.online_policy.theta if self.online_policy is not None
                  else self.hi.theta)
-        ticks0, time0 = sched.stats["ticks"], sched.stats["serve_time"]
-        saved0 = sched.prefix_stats.get("tokens_saved", 0)
-        results = sched.run(queue, theta=theta)
-        self.stats["requests"] += sched.stats["requests"]
-        sched.stats["requests"] = 0
-        self.stats["offloaded"] += sched.stats["offloaded"]
-        sched.stats["offloaded"] = 0
-        self.stats["dropped"] += sched.stats["dropped"]
-        sched.stats["dropped"] = 0
-        for k in ("degraded_local", "rejected", "breaker_open_ticks",
-                  "breaker_opens", "esc_retries", "esc_lost"):
-            self.stats[k] += sched.stats[k]
-            sched.stats[k] = 0
-        self.stats["prefill_tokens_saved"] += \
-            sched.prefix_stats.get("tokens_saved", 0) - saved0
-        self.stats["stream_ticks"] += sched.stats["ticks"] - ticks0
-        self.stats["serve_time"] += sched.stats["serve_time"] - time0
-        return results
+        return sched.run(queue, theta=theta)
 
     def summary(self) -> Dict[str, float]:
         n = max(self.stats["requests"], 1)

@@ -238,6 +238,8 @@ class CircuitBreaker:
     """
 
     CLOSED, OPEN, HALF_OPEN = "closed", "open", "half_open"
+    # numeric encoding for telemetry gauges / Chrome-trace counter tracks
+    STATE_IDS = {CLOSED: 0, OPEN: 1, HALF_OPEN: 2}
 
     def __init__(self, policy: RetryPolicy):
         self.policy = policy
@@ -249,6 +251,11 @@ class CircuitBreaker:
     @property
     def closed(self) -> bool:
         return self.state == self.CLOSED
+
+    @property
+    def state_id(self) -> int:
+        """Numeric state (0=closed, 1=open, 2=half_open) for gauge export."""
+        return self.STATE_IDS[self.state]
 
     def state_at(self, tick: int) -> str:
         """Current state, applying the open → half-open cooldown edge."""

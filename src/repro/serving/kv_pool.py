@@ -163,6 +163,16 @@ class KVPool:
     def free_pages(self) -> int:
         return len(self._free)
 
+    def gauges(self) -> Dict[str, int]:
+        """Telemetry snapshot of allocator state the host already holds —
+        sampled once per scheduler tick, no device traffic."""
+        return {
+            "free_pages": len(self._free),
+            "refcount_total": int(self._refs.sum()),
+            "prefix_index": len(self._page_index) + len(self._full_index),
+            "cow_copies": self.stats["cow_copies"],
+        }
+
     @property
     def held_slots(self) -> List[int]:
         """Slots currently holding pages — empty after a clean drain.  The

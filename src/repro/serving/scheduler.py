@@ -140,6 +140,7 @@ from repro.serving.faults import (NO_FAULTS, CircuitBreaker, Escalation,
                                   EscalationLink, FaultSchedule,
                                   FAIL_LOCAL_THETA, RetryPolicy)
 from repro.serving.kv_pool import AdmitPlan, KVPool
+from repro.serving.telemetry import SchedCounters, StatsView, Telemetry
 
 
 def _tier_tick_fn(cfg: ModelConfig, metric: str, use_kernel: bool,
@@ -408,7 +409,8 @@ class _TierRuntime:
                  page_size: int, admit_width: int, dtype,
                  prefix_entries: int = 0, max_prompt_len: int = 0,
                  num_pages: Optional[int] = None, chunk_size: int = 0,
-                 chunk_width: int = 2, spec: bool = False):
+                 chunk_width: int = 2, spec: bool = False,
+                 name: str = "S"):
         if num_pages is None:
             # sharing headroom: beyond every slot's full context, enough
             # pages to RETAIN prefix_entries full prompts without evicting
@@ -419,6 +421,7 @@ class _TierRuntime:
                            num_pages=num_pages, dtype=dtype,
                            prefix_entries=prefix_entries)
         self.sharing = prefix_entries > 0
+        self.name = name               # tier label for telemetry tracks
         self.num_slots = num_slots
         self.admit_width = admit_width
         self.chunk_size = chunk_size
@@ -448,25 +451,27 @@ class _TierRuntime:
         return None
 
     def admit(self, adm: AdmittedRequest, steps: int, decode_block: int,
-              tick: int) -> bool:
-        """Claim a slot + pages for ``adm``; False if no capacity this tick.
-        With sharing, the pool aliases the longest cached prefix and the
-        returned plan carries start / restore / save / COW decisions.  With
-        ``chunk_size`` set, a prompt whose uncached remainder exceeds one
-        chunk skips the admit lane: its pages are claimed now and its tokens
-        flow through the chunk-prefill lane C per tick."""
+              tick: int) -> Optional[int]:
+        """Claim a slot + pages for ``adm``; returns the slot index, or
+        ``None`` if no capacity this tick (callers MUST test ``is None`` —
+        slot 0 is falsy).  With sharing, the pool aliases the longest cached
+        prefix and the returned plan carries start / restore / save / COW
+        decisions.  With ``chunk_size`` set, a prompt whose uncached
+        remainder exceeds one chunk skips the admit lane: its pages are
+        claimed now and its tokens flow through the chunk-prefill lane C per
+        tick."""
         slot = self.free_slot()
         # decode writes reach bucket + steps - 2, plus <= K-1 overrun steps
         context = adm.bucket + max(steps - 1, 1) + (decode_block - 1)
         if slot is None:
-            return False
+            return None
         chunked = bool(self.chunk_size) and adm.bucket > self.chunk_size
         if self.sharing and not (chunked and self.spec):
             plan = self.pool.admit_prefix(slot, context, adm.bucket,
                                           adm.page_hashes, adm.full_hash,
                                           tick, register=not chunked)
             if plan is None:
-                return False
+                return None
             if plan.is_restore:
                 chunked = False          # full hit: restoring beats chunking
         elif self.sharing:
@@ -477,11 +482,11 @@ class _TierRuntime:
             try:
                 self.pool.alloc(slot, context, tick=tick)
             except ValueError:
-                return False
+                return None
             plan = AdmitPlan(slot=slot)
         else:
             if not self.pool.can_alloc(context):
-                return False
+                return None
             self.pool.alloc(slot, context)
             plan = AdmitPlan(slot=slot)
         self.slot_req[slot] = _Active(adm, steps)
@@ -498,7 +503,7 @@ class _TierRuntime:
         else:
             self.admitted.append(slot)
             self.plans.append(plan)
-        return True
+        return slot
 
     def release(self, slot: int) -> _Active:
         rec = self.slot_req[slot]
@@ -668,6 +673,29 @@ class ContinuousScheduler:
     chunk lane (C tokens per tick, interleaved with decode).  ``speculative``
     fuses the S→L draft-verify token cascade into the tick (greedy-only;
     both tiers admit every request at the same slot index).
+
+    Telemetry (``serving/telemetry.py``)
+    ------------------------------------
+    :meth:`set_telemetry` installs a collector; ``None`` (the default)
+    disables it — every hook site is a single ``is None`` branch, and NO
+    telemetry work touches the device: ``stats['compiles']`` stays 1 and the
+    tick keeps its single ``_host_fetch`` sync with telemetry on or off.
+    Enabled, the collector records
+
+    * a span tree per request: ``queued → admitted → prefill_chunk[i] →
+      decode_block[j] → escalate_attempt[k] → l_verify → terminal`` with the
+      terminal ``status``, TTFT, TPOT, queue-wait ticks, and retry counts
+      (terminal hooks sit exactly where records reach their FINAL status:
+      ``_finish_s`` un-escalated, ``_finish_l``, ``_finish_spec``,
+      ``_degrade``, ``_drop_expired``, ``_reject``);
+    * per-tick wall-time buckets (``fault_tick`` — fault machinery + slot
+      admission, ``build_operands``, ``dispatch``, ``host_fetch``,
+      ``postprocess``) plus pool / breaker / queue gauges sampled once per
+      tick from host state the scheduler already holds (``KVPool.gauges``,
+      breaker ``state_id``, queue depths) — no extra device traffic.
+
+    ``serving/trace_export.py`` renders the collector as Perfetto-loadable
+    Chrome ``trace_event`` JSON (slot tracks per tier, S→L flow arrows).
     """
 
     def __init__(self, s_tier, l_tier, hi: HIConfig, *, max_prompt_len: int,
@@ -711,14 +739,16 @@ class ContinuousScheduler:
                                 prefix_entries=s_entries,
                                 max_prompt_len=max_prompt_len,
                                 num_pages=num_pages, chunk_size=self.chunk,
-                                chunk_width=chunk_width, spec=speculative)
+                                chunk_width=chunk_width, spec=speculative,
+                                name="S")
         self.lrt = _TierRuntime(l_tier.cfg, l_slots, max_context, page,
                                 admit_width if speculative
                                 else min(admit_width, l_slots), cache_dtype,
                                 prefix_entries=l_entries,
                                 max_prompt_len=max_prompt_len,
                                 num_pages=num_pages, chunk_size=self.chunk,
-                                chunk_width=chunk_width, spec=speculative)
+                                chunk_width=chunk_width, spec=speculative,
+                                name="L")
         self.set_default_temperature(temperature)
         # with chunking on (and no prefix hits routing long prompts back to
         # the admit lane), every admit-lane prompt is <= chunk_size: the
@@ -729,12 +759,14 @@ class ContinuousScheduler:
         if self.chunk and not prefix_sharing:
             self._admit_s_max = min(max_prompt_len,
                                     -(-self.chunk // page) * page)
-        self.stats: Dict[str, float] = {
-            "requests": 0, "offloaded": 0, "dropped": 0, "ticks": 0,
-            "compiles": 0, "serve_time": 0.0, "blocks": 0,
-            "escalated_blocks": 0, "drafted": 0, "accepted": 0,
-            "degraded_local": 0, "rejected": 0, "breaker_open_ticks": 0,
-            "breaker_opens": 0, "esc_retries": 0, "esc_lost": 0}
+        # ONE authoritative counter store (typed); ``stats`` keeps the
+        # historical dict API as a read/write view over it — HIEngine reads
+        # the same fields live instead of copy-and-zeroing them
+        self.counters = SchedCounters()
+        self.stats: StatsView = StatsView(self.counters)
+        # telemetry collector (None = disabled: every hook site is a single
+        # ``is None`` branch — the zero-overhead default)
+        self.tel: Optional[Telemetry] = None
         # fault-injection state (host-side; set_faults replaces per run —
         # never part of the compile key, so changing it never recompiles)
         self.faults: FaultSchedule = NO_FAULTS
@@ -789,7 +821,7 @@ class ContinuousScheduler:
                 spec(s_in0), spec(l_in0),
                 spec(self.srt.pool_operand()),
                 spec(self.lrt.pool_operand())).compile()
-        self.stats["compiles"] += 1
+        self.counters.compiles += 1
 
     def set_faults(self, faults: Optional[FaultSchedule] = None,
                    policy: Optional[RetryPolicy] = None,
@@ -810,6 +842,15 @@ class ContinuousScheduler:
             self.policy = policy
         if validate is not None:
             self.validate = bool(validate)
+
+    def set_telemetry(self, tel: Optional[Telemetry]) -> None:
+        """Install (``Telemetry``) or remove (``None``) the telemetry
+        collector for subsequent ``run`` calls.  Host-side only — never part
+        of the compile key, so toggling it never recompiles; disabled is the
+        zero-overhead default (each hook is one ``is None`` branch)."""
+        self.tel = tel
+        if tel is not None:
+            tel.counters = self.counters
 
     def set_default_temperature(self, temperature: float) -> None:
         """Engine-level sampling temperature used for requests that don't set
@@ -836,8 +877,11 @@ class ContinuousScheduler:
         sync)."""
         from repro.serving import engine as engine_mod   # _host_fetch hook
 
+        tel = self.tel
         s_in = self.srt.tick_inputs(self._admit_s_max)
         l_in = self.lrt.tick_inputs(self._admit_s_max)
+        if tel is not None:
+            tel.mark("build_operands")
         with warnings.catch_warnings():
             warnings.filterwarnings("ignore", message=".*[Dd]onat")
             out, s_pool, l_pool = \
@@ -846,9 +890,28 @@ class ContinuousScheduler:
                            self.lrt.pool_operand())
         self.srt.store_pool(s_pool)
         self.lrt.store_pool(l_pool)
+        if tel is not None:
+            tel.mark("dispatch")
         host = engine_mod._host_fetch(out)   # the tick's single sync
-        self.stats["ticks"] += 1
+        if tel is not None:
+            tel.mark("host_fetch")
+        self.counters.ticks += 1
         return host
+
+    def _gauges(self, l_queue_len: int = 0) -> Dict[str, float]:
+        """Per-tick telemetry gauges — all host state the scheduler already
+        holds, so sampling costs no device traffic."""
+        g: Dict[str, float] = {}
+        for rt in (self.srt, self.lrt):
+            for k, v in rt.pool.gauges().items():
+                g[f"{k}@{rt.name}"] = v
+            g[f"busy_slots@{rt.name}"] = rt.busy
+        g["l_queue_depth"] = l_queue_len
+        if self._link is not None:
+            g["esc_in_flight"] = self._link.pending
+        if self._breaker is not None:
+            g["breaker_state"] = self._breaker.state_id
+        return g
 
     def run(self, queue: AdmissionQueue, *, theta: Optional[float] = None
             ) -> Dict[int, Dict[str, Any]]:
@@ -862,24 +925,45 @@ class ContinuousScheduler:
         :meth:`set_faults`.  Ticks that only advance host-side timers
         (backoff, breaker cooldown, fault windows, admission retries)
         dispatch the same compiled executable with every lane skipped, so
-        ``stats['compiles']`` stays at 1."""
+        ``stats['compiles']`` stays at 1.
+
+        ``stats['serve_time']`` accounting is SINGLE-ENTRY: one
+        ``try/finally`` brackets the whole drain, so every exit path (normal
+        completion, the speculative early return, the stall RuntimeError)
+        adds the elapsed time exactly once — the old per-path additions
+        could in principle double-book (tests/test_telemetry.py regresses
+        this)."""
+        t0 = time.perf_counter()
+        try:
+            return self._run(queue, theta)
+        finally:
+            self.counters.serve_time += time.perf_counter() - t0
+
+    def _run(self, queue: AdmissionQueue, theta: Optional[float]
+             ) -> Dict[int, Dict[str, Any]]:
         theta = float(self.hi.theta if theta is None else theta)
         theta_j = jnp.asarray(theta, jnp.float32)
         results: Dict[int, Dict[str, Any]] = {}
-        t0 = time.perf_counter()
+        tel = self.tel
 
         if self.speculative:
             while len(queue) or self.srt.busy:
+                if tel is not None:
+                    tel.begin_tick(self.counters.ticks)
                 self._try_admit_spec(queue, results)
+                if tel is not None:
+                    tel.mark("fault_tick")   # admission bookkeeping bucket
                 host = self._dispatch(theta_j)
                 self._absorb_spec(host, results)
-            self.stats["serve_time"] += time.perf_counter() - t0
+                if tel is not None:
+                    tel.mark("postprocess")
+                    tel.end_tick(self._gauges())
             return results
 
         # per-run fault state: run-relative tick 0 anchors here, so a seeded
         # FaultSchedule replays identically on a reused scheduler
         theta_fail_j = jnp.asarray(FAIL_LOCAL_THETA, jnp.float32)
-        self._tick0 = int(self.stats["ticks"])
+        self._tick0 = self.counters.ticks
         self._link = EscalationLink(self.faults, self.policy)
         self._breaker = CircuitBreaker(self.policy)
         self._esc_meta = {}
@@ -888,10 +972,12 @@ class ContinuousScheduler:
         l_queue: deque = deque()
         while (len(queue) or l_queue or self.srt.busy or self.lrt.busy
                or self._link.pending):
-            cur = int(self.stats["ticks"]) - self._tick0
+            if tel is not None:
+                tel.begin_tick(self.counters.ticks)
+            cur = self.counters.ticks - self._tick0
             state = self._breaker.state_at(cur)
             if state == CircuitBreaker.OPEN:
-                self.stats["breaker_open_ticks"] += 1
+                self.counters.breaker_open_ticks += 1
             else:
                 if state == CircuitBreaker.CLOSED:
                     self._probe = None
@@ -912,6 +998,8 @@ class ContinuousScheduler:
                     if self._breaker.state == CircuitBreaker.HALF_OPEN \
                             and self._probe is None:
                         self._probe = esc.rid
+            if tel is not None:
+                tel.mark("fault_tick")   # fault machinery + admission
             if not (len(queue) or l_queue or self.srt.busy or self.lrt.busy
                     or self._link.pending):
                 break                  # everything left resolved host-side
@@ -938,10 +1026,12 @@ class ContinuousScheduler:
             if self.validate:
                 self.srt.pool.check_invariants()
                 self.lrt.pool.check_invariants()
+            if tel is not None:
+                tel.mark("postprocess")
+                tel.end_tick(self._gauges(len(l_queue)))
 
-        self.stats["esc_lost"] += self._link.lost
-        self.stats["breaker_opens"] += self._breaker.opens
-        self.stats["serve_time"] += time.perf_counter() - t0
+        self.counters.esc_lost += self._link.lost
+        self.counters.breaker_opens += self._breaker.opens
         return results
 
     # -- fault machinery (host-side; see serving/faults.py) -----------------
@@ -979,6 +1069,9 @@ class ContinuousScheduler:
             for slot in range(self.lrt.num_slots):
                 if self.lrt.slot_req[slot] is not None:
                     rec = self.lrt.release(slot)
+                    if self.tel is not None:
+                        self.tel.req_l_release(rec.adm.request.request_id,
+                                               "outage_abort")
                     self._esc_failed(
                         self._esc_meta[rec.adm.request.request_id], cur,
                         results)
@@ -988,6 +1081,8 @@ class ContinuousScheduler:
                                  cur, results)
         arrived, failed = link.step(cur)
         for esc in arrived:
+            if self.tel is not None:
+                self.tel.req_esc_end(esc.rid, "arrived")
             l_queue.append(esc.adm)
         for esc in failed:
             self._esc_failed(esc, cur, results)
@@ -998,6 +1093,8 @@ class ContinuousScheduler:
                     self._degrade(esc, cur, results)  # too late to retry
                 else:
                     link.send(esc, cur)
+                    if self.tel is not None:
+                        self.tel.req_esc_send(esc.rid, -1, esc.attempt)
 
     @staticmethod
     def _budget_expired(adm: AdmittedRequest) -> bool:
@@ -1011,6 +1108,8 @@ class ContinuousScheduler:
         exponential backoff — or give up when retries are exhausted or the
         latency budget says the answer would arrive too late."""
         self._breaker.record_failure(cur)
+        if self.tel is not None:
+            self.tel.req_esc_end(esc.rid, "failed")
         if self._probe == esc.rid:
             self._probe = None
         if esc.attempt >= self.policy.max_retries \
@@ -1018,17 +1117,19 @@ class ContinuousScheduler:
             self._degrade(esc, cur, results)
         else:
             self._link.schedule_retry(esc, cur)
-            self.stats["esc_retries"] += 1
+            self.counters.esc_retries += 1
 
     def _degrade(self, esc, cur: int, results: Dict) -> None:
         """Give up on the escalation: the S-tier answer (already recorded)
         stands, flagged ``status='degraded_local'``."""
         self._esc_meta.pop(esc.rid, None)
-        self.stats["degraded_local"] += 1
+        self.counters.degraded_local += 1
         rec = results[esc.rid]
         rec["status"] = "degraded_local"
         rec["escalation_retries"] = esc.attempt
         rec["queue_wait_ticks"] = max(cur - esc.created_tick, 0)
+        if self.tel is not None:
+            self.tel.req_terminal(esc.rid, rec)
 
     def _l_give_up(self, adm: AdmittedRequest, cur: int,
                    results: Dict) -> None:
@@ -1044,8 +1145,8 @@ class ContinuousScheduler:
         ``status='rejected'`` — the bounded replacement for the old
         "scheduler stalled" RuntimeError, which an unsatisfiable page demand
         (prompt larger than the whole pool) used to hit."""
-        self.stats["requests"] += 1
-        self.stats["rejected"] += 1
+        self.counters.requests += 1
+        self.counters.rejected += 1
         warnings.warn(
             f"request {adm.request.request_id} rejected: admission failed "
             f"{adm.admit_retries} ticks running (bucket {adm.bucket} needs "
@@ -1064,6 +1165,9 @@ class ContinuousScheduler:
             "esc_created_tick": -1,
             "ttft": float("nan"),
         }
+        if self.tel is not None:
+            self.tel.req_terminal(adm.request.request_id,
+                                  results[adm.request.request_id])
 
     # -- admission / completion -------------------------------------------
 
@@ -1081,7 +1185,7 @@ class ContinuousScheduler:
         rt.plans = []
         if limit == 0:
             return
-        tick = int(self.stats["ticks"])
+        tick = self.counters.ticks
         cap = rt.admit_width if limit is None else min(rt.admit_width, limit)
         admitted = 0
         while admitted < cap and len(queue):
@@ -1089,7 +1193,8 @@ class ContinuousScheduler:
                 break
             adm = queue.popleft()
             steps = min(adm.request.max_new_tokens, self.max_new_tokens)
-            if not rt.admit(adm, steps, self.decode_block, tick):
+            slot = rt.admit(adm, steps, self.decode_block, tick)
+            if slot is None:
                 adm.admit_retries += 1
                 if on_give_up is not None and \
                         adm.admit_retries > self.policy.admit_retry_limit:
@@ -1097,6 +1202,10 @@ class ContinuousScheduler:
                     continue
                 queue.appendleft(adm)   # no pages this tick: retry next tick
                 break
+            if self.tel is not None:
+                self.tel.req_admitted(rt.name, slot, adm.request.request_id,
+                                      adm.submit_time,
+                                      chunked=bool(rt.chunk_left[slot]))
             admitted += 1
 
     def _try_admit_spec(self, queue, results: Dict) -> None:
@@ -1106,7 +1215,7 @@ class ContinuousScheduler:
         srt, lrt = self.srt, self.lrt
         srt.admitted, srt.plans = [], []
         lrt.admitted, lrt.plans = [], []
-        tick = int(self.stats["ticks"])
+        tick = self.counters.ticks
         admitted = 0
         while admitted < srt.admit_width and len(queue):
             slot = srt.free_slot()
@@ -1115,14 +1224,14 @@ class ContinuousScheduler:
             assert lrt.slot_req[slot] is None, "spec slot pairing broken"
             adm = queue.popleft()
             steps = min(adm.request.max_new_tokens, self.max_new_tokens)
-            if not srt.admit(adm, steps, self.decode_block, tick):
+            if srt.admit(adm, steps, self.decode_block, tick) is None:
                 adm.admit_retries += 1
                 if adm.admit_retries > self.policy.admit_retry_limit:
                     self._reject(adm, results)
                     continue
                 queue.appendleft(adm)
                 break
-            if not lrt.admit(adm, steps, self.decode_block, tick):
+            if lrt.admit(adm, steps, self.decode_block, tick) is None:
                 # roll the S-side admission back and retry next tick: drop
                 # any same-tick prefix-index registrations first (their pages
                 # will never be prefilled now — a later lookup must not alias
@@ -1140,6 +1249,10 @@ class ContinuousScheduler:
                     continue
                 queue.appendleft(adm)
                 break
+            if self.tel is not None:
+                self.tel.req_admitted("S", slot, adm.request.request_id,
+                                      adm.submit_time,
+                                      chunked=bool(srt.chunk_left[slot]))
             admitted += 1
 
     def _drop_expired(self, l_queue: deque, results: Dict,
@@ -1160,7 +1273,7 @@ class ContinuousScheduler:
             adm = l_queue.popleft()
             budget = adm.request.latency_budget
             if budget is not None and now - adm.submit_time > budget:
-                self.stats["dropped"] += 1
+                self.counters.dropped += 1
                 esc = self._esc_meta.pop(adm.request.request_id, None)
                 rec = results.get(adm.request.request_id)
                 if rec is not None:
@@ -1170,6 +1283,8 @@ class ContinuousScheduler:
                         rec["escalation_retries"] = esc.attempt
                         rec["queue_wait_ticks"] = max(
                             cur - esc.created_tick, 0)
+                    if self.tel is not None:
+                        self.tel.req_terminal(adm.request.request_id, rec)
             else:
                 kept.append(adm)
         l_queue.extend(kept)
@@ -1181,6 +1296,10 @@ class ContinuousScheduler:
         for row, (slot, keep, fin) in enumerate(rt.chunk_sched):
             rt.chunk_fed[slot] += keep
             rt.chunk_left[slot] -= keep
+            if self.tel is not None:
+                self.tel.req_chunk(rt.name, slot,
+                                   rt.slot_req[slot].adm.request.request_id,
+                                   fed=keep, keep=int(rt.chunk_left[slot]))
             if fin and emit:
                 rt.slot_req[slot].emit(out["chunk_tok"][row],
                                        out["chunk_conf"][row])
@@ -1204,6 +1323,9 @@ class ContinuousScheduler:
             rt.last_tok[slot] = int(out["toks"][k_steps - 1][slot])
             rt.tok_idx[slot] += k_steps
             rt.pos[slot] += k_steps
+            if self.tel is not None:
+                self.tel.req_decode(rt.name, slot,
+                                    rec.adm.request.request_id, k_steps)
             if rec.done:
                 finish(rt.release(slot))
 
@@ -1231,11 +1353,17 @@ class ContinuousScheduler:
             keep = int(l["keep"][slot])
             esc = bool(l["esc"][slot])
             rec.rounds.append((esc, n))
-            self.stats["blocks"] += 1
-            self.stats["drafted"] += k
-            self.stats["accepted"] += int(l["accept"][slot])
+            self.counters.blocks += 1
+            self.counters.drafted += k
+            self.counters.accepted += int(l["accept"][slot])
             if esc:
-                self.stats["escalated_blocks"] += 1
+                self.counters.escalated_blocks += 1
+            if self.tel is not None:
+                rid = rec.adm.request.request_id
+                self.tel.req_decode("S", slot, rid, n)
+                if esc:
+                    self.tel.req_l_verify(slot, rid,
+                                          int(l["accept"][slot]), n)
             for j in range(n):
                 rec.emit(l["toks"][slot][j], l["confs"][slot][j])
             last = int(l["toks"][slot][max(n - 1, 0)])
@@ -1259,7 +1387,7 @@ class ContinuousScheduler:
         not hidden by a rewritten gate decision."""
         conf = float(np.mean(np.asarray(rec.confs, np.float32)))
         rid = rec.adm.request.request_id
-        self.stats["requests"] += 1
+        self.counters.requests += 1
         results[rid] = {
             "tokens": np.asarray(rec.tokens, np.int32),
             "s_tokens": np.asarray(rec.tokens, np.int32),
@@ -1274,9 +1402,11 @@ class ContinuousScheduler:
             "ttft": rec.ttft,
         }
         if conf >= theta:
+            if self.tel is not None:      # never escalates: final status
+                self.tel.req_terminal(rid, results[rid])
             return
-        self.stats["offloaded"] += 1
-        cur = int(self.stats["ticks"]) - self._tick0
+        self.counters.offloaded += 1
+        cur = self.counters.ticks - self._tick0
         results[rid]["esc_created_tick"] = cur
         esc = Escalation(rec.adm, rid, cur)
         if self._breaker.state == CircuitBreaker.OPEN:
@@ -1287,6 +1417,8 @@ class ContinuousScheduler:
         rec.adm.admit_retries = 0   # L admission gets a fresh retry budget
         self._esc_meta[rid] = esc
         self._link.send(esc, cur)
+        if self.tel is not None:
+            self.tel.req_esc_send(rid, -1, esc.attempt)
 
     def _finish_l(self, rec: _Active, results: Dict) -> None:
         rid = rec.adm.request.request_id
@@ -1296,7 +1428,7 @@ class ContinuousScheduler:
         out["status"] = "ok"
         esc = self._esc_meta.pop(rid, None)
         if esc is not None:
-            cur = int(self.stats["ticks"]) - self._tick0
+            cur = self.counters.ticks - self._tick0
             out["escalation_retries"] = esc.attempt
             out["queue_wait_ticks"] = max(
                 (esc.l_admit_tick if esc.l_admit_tick >= 0 else cur)
@@ -1304,13 +1436,15 @@ class ContinuousScheduler:
             self._breaker.record_success()
             if self._probe == rid:
                 self._probe = None
+        if self.tel is not None:
+            self.tel.req_terminal(rid, out)
 
     def _finish_spec(self, rec: _Active, results: Dict) -> None:
         rid = rec.adm.request.request_id
-        self.stats["requests"] += 1
+        self.counters.requests += 1
         escalated = sum(1 for esc, _ in rec.rounds if esc)
         if escalated:
-            self.stats["offloaded"] += 1
+            self.counters.offloaded += 1
         results[rid] = {
             "tokens": np.asarray(rec.tokens, np.int32),
             "s_tokens": np.asarray(rec.tokens, np.int32),
@@ -1328,3 +1462,5 @@ class ContinuousScheduler:
             "blocks": len(rec.rounds),
             "escalated_blocks": escalated,
         }
+        if self.tel is not None:
+            self.tel.req_terminal(rid, results[rid])

@@ -50,7 +50,7 @@ def train_cnn(cfg: cnn.CNNConfig, x_train: np.ndarray, y_train: np.ndarray,
 
     n = len(x_train)
     order_rng = np.random.default_rng(seed)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for ep in range(epochs):
         perm = order_rng.permutation(n)
         losses = []
@@ -61,7 +61,7 @@ def train_cnn(cfg: cnn.CNNConfig, x_train: np.ndarray, y_train: np.ndarray,
             losses.append(float(loss))
         if verbose:
             print(f"  epoch {ep}: loss {np.mean(losses):.4f} "
-                  f"({time.time() - t0:.0f}s)")
+                  f"({time.perf_counter() - t0:.0f}s)")
     return params
 
 

@@ -124,6 +124,39 @@ def test_chaos_never_corrupts_seeded(params):
     _check(*params)
 
 
+def test_telemetry_under_active_faults():
+    """PR-7 satellite: with telemetry ON under an active FaultSchedule the
+    compiled-shape set stays at one, every terminating request still gets a
+    complete span tree whose terminal status matches its record, and the
+    fault path's escalation spans carry the retry attempts."""
+    from repro.serving.telemetry import Telemetry
+
+    eng, _ = _state()
+    tel = Telemetry()
+    faults = FaultSchedule(seed=5, loss_prob=0.25, delay_ticks=1,
+                           delay_jitter=2, outages=((2, 6),),
+                           spikes=((7, 10),))
+    retry = RetryPolicy(ack_timeout_ticks=2, max_retries=2,
+                        backoff_cap_ticks=4, breaker_threshold=2,
+                        breaker_cooldown_ticks=4)
+    out = eng.serve_stream(_requests(), validate=True, faults=faults,
+                           retry=retry, telemetry=tel, **KW)
+    assert eng.stats["stream_compiles"] == 1
+    assert set(tel.traces) == set(out)
+    for rid, rec in out.items():
+        tr = tel.traces[rid]
+        assert tr.complete and tr.status == rec["status"]
+        kinds = [s.kind for s in tr.spans]
+        assert kinds.count("terminal") == 1
+        if rec["escalation_retries"]:
+            # one escalate_attempt span per transport attempt
+            assert kinds.count("escalate_attempt") >= \
+                rec["escalation_retries"]
+    # the gauge stream saw the breaker state change if anything degraded
+    assert len(tel.ticks) > 0
+    assert all(t.t1 >= t.t0 for t in tel.ticks)
+
+
 if HAVE_HYPOTHESIS:
     @given(
         seed=st.integers(0, 2**16),
