@@ -17,6 +17,24 @@ what makes the 500k-token cache workable.
 Numerical-safety choices: running max starts at -1e30 (finite, so the
 `exp(m - m_new)` correction never sees inf-inf = NaN) and masked probability
 mass is explicitly zeroed (a fully-masked tile keeps l = 0).
+
+Quantized page pools (int8, per-page-per-head scales)
+-----------------------------------------------------
+The paged kernels optionally take the pool QUANTIZED: ``pool_k/v`` become
+(P, page, K, Dh) int8 and a symmetric fp32 scale tensor ``scale_k/v`` of
+shape (P, K) rides beside each pool (one scale per physical page per kv
+head; dequantized value = ``int8 * scale[page, head]``).  The scale is a
+fourth/fifth operand block-spec'd THROUGH THE SAME block-table index_map as
+its pool — grid step (b, kv, j) DMAs the (1, 1) scale of physical page
+``block[b, j]`` alongside the page itself — and dequantization happens
+in-register inside ``_paged_kernel``/``_chunk_paged_kernel``, right before
+the fp32 flash update.  HBM traffic per gathered page drops ~2x (int8 pages
++ 4 bytes/head of scale vs bf16 pages) with no extra pass and no
+materialised dequantized copy.  ``scale_k=None`` (the default) traces
+exactly the unquantized graph, so bf16 pools stay bitwise identical.
+Write-side quantization (monotone per-page running-max scales) lives in
+``models/layers.py``; the scale rows move with their pages under COW via
+``copy_pages_pallas``, which is shape/dtype-generic over the pool operand.
 """
 from __future__ import annotations
 
@@ -29,6 +47,13 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 _NEG = -1e30
+
+# Widest per-slot block-table row the paged kernels accept: the table is a
+# SCALAR-PREFETCH operand (SMEM-resident on TPU), so a slot's row must fit
+# the scalar-prefetch block.  KVPool refuses configurations past this at
+# allocation time — a clear host-side error instead of a Pallas lowering
+# failure deep inside the tick executable.
+MAX_PREFETCH_PAGES = 2048
 
 
 def _flash_update(q, k, v, valid, acc_ref, m_ref, l_ref, *, scale: float,
@@ -137,6 +162,20 @@ def _paged_kernel(blk_ref, q_ref, k_ref, v_ref, mask_ref,
                   init=pl.program_id(2) == 0)
 
 
+def _paged_kernel_quant(blk_ref, q_ref, k_ref, v_ref, sk_ref, sv_ref,
+                        mask_ref, acc_ref, m_ref, l_ref, *, scale: float):
+    """int8-pool variant: the page's (1, 1) per-head scale rides in via the
+    same block-table index_map as the page; dequant is one in-register
+    multiply before the shared fp32 flash update."""
+    del blk_ref      # consumed by the index_maps, not the body
+    _flash_update(q_ref[0, 0].astype(jnp.float32),
+                  k_ref[0, :, 0].astype(jnp.float32) * sk_ref[0, 0],
+                  v_ref[0, :, 0].astype(jnp.float32) * sv_ref[0, 0],
+                  mask_ref[0, 0] > 0,
+                  acc_ref, m_ref, l_ref, scale=scale,
+                  init=pl.program_id(2) == 0)
+
+
 def copy_pages_pallas(pool: jnp.ndarray, src_of: jnp.ndarray, *,
                       interpret: bool = True) -> jnp.ndarray:
     """Copy-on-write page duplication over a physical page pool.
@@ -189,10 +228,30 @@ def _chunk_paged_kernel(blk_ref, q_ref, k_ref, v_ref, mask_ref,
     over the sequential last grid dim — is the single-token kernel's
     discipline."""
     del blk_ref      # consumed by the index_maps, not the body
-    q = q_ref[0, 0].astype(jnp.float32)           # (C, G, D)
-    k = k_ref[0, :, 0].astype(jnp.float32)        # (page, D)
-    v = v_ref[0, :, 0].astype(jnp.float32)
-    valid = mask_ref[0, :, 0] > 0                 # (C, page)
+    _chunk_flash_update(q_ref[0, 0].astype(jnp.float32),        # (C, G, D)
+                        k_ref[0, :, 0].astype(jnp.float32),     # (page, D)
+                        v_ref[0, :, 0].astype(jnp.float32),
+                        mask_ref[0, :, 0] > 0,                  # (C, page)
+                        acc_ref, m_ref, l_ref, scale=scale)
+
+
+def _chunk_paged_kernel_quant(blk_ref, q_ref, k_ref, v_ref, sk_ref, sv_ref,
+                              mask_ref, acc_ref, m_ref, l_ref, *,
+                              scale: float):
+    """int8-pool variant of ``_chunk_paged_kernel`` — same in-register
+    per-page-per-head dequant as ``_paged_kernel_quant``."""
+    del blk_ref      # consumed by the index_maps, not the body
+    _chunk_flash_update(q_ref[0, 0].astype(jnp.float32),
+                        k_ref[0, :, 0].astype(jnp.float32) * sk_ref[0, 0],
+                        v_ref[0, :, 0].astype(jnp.float32) * sv_ref[0, 0],
+                        mask_ref[0, :, 0] > 0,
+                        acc_ref, m_ref, l_ref, scale=scale)
+
+
+def _chunk_flash_update(q, k, v, valid, acc_ref, m_ref, l_ref, *,
+                        scale: float) -> None:
+    """Chunked online-softmax step: q (C, G, D); k/v (page, D); valid
+    (C, page)."""
 
     @pl.when(pl.program_id(2) == 0)
     def _init():
@@ -222,6 +281,8 @@ def decode_attention_chunk_paged_pallas(q: jnp.ndarray, pool_k: jnp.ndarray,
                                         pool_v: jnp.ndarray,
                                         block: jnp.ndarray,
                                         valid: jnp.ndarray, *,
+                                        scale_k: jnp.ndarray | None = None,
+                                        scale_v: jnp.ndarray | None = None,
                                         interpret: bool = True) -> jnp.ndarray:
     """q: (B, C, H, D) — a chunk of C query tokens per slot; pool_k/v:
     (P, page, K, D); block: (B, n_pages) int32; valid: (B, C, n_pages * page)
@@ -231,28 +292,36 @@ def decode_attention_chunk_paged_pallas(q: jnp.ndarray, pool_k: jnp.ndarray,
     One grid step DMAs physical page ``block[b, j]`` (scalar-prefetched) and
     accumulates it into all C queries' online-softmax states at once — the
     chunk costs ONE streaming pass over the slot's pages instead of C.
-    Returns (B, C, H, D) attention output (fp32 accumulation)."""
+    ``scale_k/v`` (P, K) fp32 mark the pools int8-quantized (see module
+    docstring); dequant fuses into the gather.  Returns (B, C, H, D)
+    attention output (fp32 accumulation)."""
     b, c, h, d = q.shape
     page, kh = pool_k.shape[1], pool_k.shape[2]
     npg = block.shape[1]
     g = h // kh
     qg = q.reshape(b, c, kh, g, d).transpose(0, 2, 1, 3, 4)  # (B, KH, C, G, D)
     mask = valid.astype(jnp.int32).reshape(b, c, npg, page)
+    quant = scale_k is not None
 
-    kernel = functools.partial(_chunk_paged_kernel, scale=1.0 / math.sqrt(d))
+    body = _chunk_paged_kernel_quant if quant else _chunk_paged_kernel
+    kernel = functools.partial(body, scale=1.0 / math.sqrt(d))
+    page_spec = pl.BlockSpec((1, page, 1, d),
+                             lambda bi, ki, si, blk: (blk[bi, si], 0, ki, 0))
+    scale_spec = pl.BlockSpec((1, 1),
+                              lambda bi, ki, si, blk: (blk[bi, si], ki))
+    in_specs = [
+        pl.BlockSpec((1, 1, c, g, d),
+                     lambda bi, ki, si, blk: (bi, ki, 0, 0, 0)),
+        page_spec,
+        page_spec,
+        *([scale_spec, scale_spec] if quant else []),
+        pl.BlockSpec((1, c, 1, page),
+                     lambda bi, ki, si, blk: (bi, 0, si, 0)),
+    ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b, kh, npg),
-        in_specs=[
-            pl.BlockSpec((1, 1, c, g, d),
-                         lambda bi, ki, si, blk: (bi, ki, 0, 0, 0)),
-            pl.BlockSpec((1, page, 1, d),
-                         lambda bi, ki, si, blk: (blk[bi, si], 0, ki, 0)),
-            pl.BlockSpec((1, page, 1, d),
-                         lambda bi, ki, si, blk: (blk[bi, si], 0, ki, 0)),
-            pl.BlockSpec((1, c, 1, page),
-                         lambda bi, ki, si, blk: (bi, 0, si, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, c, g, d),
                          lambda bi, ki, si, blk: (bi, ki, 0, 0, 0)),
@@ -260,6 +329,8 @@ def decode_attention_chunk_paged_pallas(q: jnp.ndarray, pool_k: jnp.ndarray,
             pl.BlockSpec((1, 1, c, g), lambda bi, ki, si, blk: (bi, ki, 0, 0)),
         ],
     )
+    operands = (block, qg, pool_k, pool_v) + \
+        ((scale_k, scale_v) if quant else ()) + (mask,)
     acc, m, l = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -269,7 +340,7 @@ def decode_attention_chunk_paged_pallas(q: jnp.ndarray, pool_k: jnp.ndarray,
             jax.ShapeDtypeStruct((b, kh, c, g), jnp.float32),
         ],
         interpret=interpret,
-    )(block, qg, pool_k, pool_v, mask)
+    )(*operands)
 
     out = acc / jnp.maximum(l, 1e-30)[..., None]            # (B, KH, C, G, D)
     return out.transpose(0, 2, 1, 3, 4).reshape(b, c, h, d).astype(q.dtype)
@@ -278,9 +349,14 @@ def decode_attention_chunk_paged_pallas(q: jnp.ndarray, pool_k: jnp.ndarray,
 def decode_attention_paged_pallas(q: jnp.ndarray, pool_k: jnp.ndarray,
                                   pool_v: jnp.ndarray, block: jnp.ndarray,
                                   valid: jnp.ndarray, *,
+                                  scale_k: jnp.ndarray | None = None,
+                                  scale_v: jnp.ndarray | None = None,
                                   interpret: bool = True) -> jnp.ndarray:
     """q: (B, 1, H, D); pool_k/v: (P, page, K, D); block: (B, n_pages) int32;
-    valid: (B, n_pages * page) bool (per-slot positional mask).
+    valid: (B, n_pages * page) bool (per-slot positional mask); scale_k/v
+    (P, K) fp32 mark the pools int8-quantized (see module docstring) — the
+    per-page-per-head scale rides the same block-table index_map and dequant
+    fuses into the gather.
 
     Returns (B, 1, H, D) attention output (fp32 accumulation)."""
     b, _, h, d = q.shape
@@ -289,25 +365,33 @@ def decode_attention_paged_pallas(q: jnp.ndarray, pool_k: jnp.ndarray,
     g = h // kh
     qg = q.reshape(b, kh, g, d)
     mask = valid.astype(jnp.int32).reshape(b, npg, page)
+    quant = scale_k is not None
 
-    kernel = functools.partial(_paged_kernel, scale=1.0 / math.sqrt(d))
+    body = _paged_kernel_quant if quant else _paged_kernel
+    kernel = functools.partial(body, scale=1.0 / math.sqrt(d))
+    page_spec = pl.BlockSpec((1, page, 1, d),
+                             lambda bi, ki, si, blk: (blk[bi, si], 0, ki, 0))
+    scale_spec = pl.BlockSpec((1, 1),
+                              lambda bi, ki, si, blk: (blk[bi, si], ki))
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), lambda bi, ki, si, blk: (bi, ki, 0, 0)),
+        page_spec,
+        page_spec,
+        *([scale_spec, scale_spec] if quant else []),
+        pl.BlockSpec((1, 1, page), lambda bi, ki, si, blk: (bi, si, 0)),
+    ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b, kh, npg),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, d), lambda bi, ki, si, blk: (bi, ki, 0, 0)),
-            pl.BlockSpec((1, page, 1, d),
-                         lambda bi, ki, si, blk: (blk[bi, si], 0, ki, 0)),
-            pl.BlockSpec((1, page, 1, d),
-                         lambda bi, ki, si, blk: (blk[bi, si], 0, ki, 0)),
-            pl.BlockSpec((1, 1, page), lambda bi, ki, si, blk: (bi, si, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, g, d), lambda bi, ki, si, blk: (bi, ki, 0, 0)),
             pl.BlockSpec((1, 1, g), lambda bi, ki, si, blk: (bi, ki, 0)),
             pl.BlockSpec((1, 1, g), lambda bi, ki, si, blk: (bi, ki, 0)),
         ],
     )
+    operands = (block, qg, pool_k, pool_v) + \
+        ((scale_k, scale_v) if quant else ()) + (mask,)
     acc, m, l = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -317,7 +401,7 @@ def decode_attention_paged_pallas(q: jnp.ndarray, pool_k: jnp.ndarray,
             jax.ShapeDtypeStruct((b, kh, g), jnp.float32),
         ],
         interpret=interpret,
-    )(block, qg, pool_k, pool_v, mask)
+    )(*operands)
 
     out = acc / jnp.maximum(l, 1e-30)[..., None]
     return out.reshape(b, 1, h, d).astype(q.dtype)

@@ -44,28 +44,40 @@ def decode_attention(q: jnp.ndarray, cache_k: jnp.ndarray,
 @jax.jit
 def decode_attention_paged(q: jnp.ndarray, pool_k: jnp.ndarray,
                            pool_v: jnp.ndarray, block: jnp.ndarray,
-                           valid: jnp.ndarray) -> jnp.ndarray:
+                           valid: jnp.ndarray,
+                           scale_k: jnp.ndarray | None = None,
+                           scale_v: jnp.ndarray | None = None) -> jnp.ndarray:
     """Flash decode attention over a PAGED KV pool.
 
     q: (B,1,H,D); pool_k/v: (P, page, K, D); block: (B, n_pages) int32 block
     table (scalar-prefetched — the kernel DMAs physical pages directly);
-    valid: (B, n_pages * page) per-slot positional mask."""
+    valid: (B, n_pages * page) per-slot positional mask.  Passing
+    ``scale_k/v`` (P, K) fp32 marks the pools int8-quantized: the page's
+    per-head scale is DMA'd through the same block-table index_map and
+    dequant happens in-register inside the kernel."""
     return _da.decode_attention_paged_pallas(q, pool_k, pool_v, block, valid,
+                                             scale_k=scale_k, scale_v=scale_v,
                                              interpret=INTERPRET)
 
 
 @jax.jit
 def decode_attention_chunk_paged(q: jnp.ndarray, pool_k: jnp.ndarray,
                                  pool_v: jnp.ndarray, block: jnp.ndarray,
-                                 valid: jnp.ndarray) -> jnp.ndarray:
+                                 valid: jnp.ndarray,
+                                 scale_k: jnp.ndarray | None = None,
+                                 scale_v: jnp.ndarray | None = None
+                                 ) -> jnp.ndarray:
     """Flash CHUNK attention over a paged KV pool: C query tokens per slot at
     per-slot start positions in one streaming pass over the slot's pages.
 
     q: (B, C, H, D); pool_k/v: (P, page, K, D); block: (B, n_pages) int32
     (scalar-prefetched); valid: (B, C, n_pages * page) positional +
-    intra-chunk causal mask."""
+    intra-chunk causal mask.  ``scale_k/v`` (P, K) fp32 mark the pools
+    int8-quantized with dequant fused into the page gather."""
     return _da.decode_attention_chunk_paged_pallas(q, pool_k, pool_v, block,
-                                                   valid, interpret=INTERPRET)
+                                                   valid, scale_k=scale_k,
+                                                   scale_v=scale_v,
+                                                   interpret=INTERPRET)
 
 
 @jax.jit
@@ -74,10 +86,12 @@ def copy_pages(pool: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray
     """Copy-on-write page duplication: pool pages ``dst`` become copies of
     pages ``src`` (pairs padded with (0, 0) — null onto null).
 
-    pool: (L, P, page, K, D).  The (src, dst) pairs are expanded into a
-    per-page source map so the kernel writes every output page exactly once
-    (identity for non-COW pages) with the map scalar-prefetched — see
-    ``decode_attention.copy_pages_pallas``."""
+    pool: (L, P, ...) of any dtype — the kernel's block shape and out_shape
+    derive from the operand, so the same op moves (L, P, page, K, D) int8/bf16
+    page pools AND their (L, P, K) fp32 per-page scale rows.  The (src, dst)
+    pairs are expanded into a per-page source map so the kernel writes every
+    output page exactly once (identity for non-COW pages) with the map
+    scalar-prefetched — see ``decode_attention.copy_pages_pallas``."""
     p = pool.shape[1]
     src_of = jnp.arange(p, dtype=jnp.int32).at[dst].set(src)
     return _da.copy_pages_pallas(pool, src_of, interpret=INTERPRET)

@@ -161,20 +161,34 @@ def init_paged_cache(cfg: ModelConfig, num_slots: int, num_pages: int,
     conv_dim = cfg.ssm_d_inner + 2 * n
     kv_shape = (g, num_pages, page_size, cfg.num_kv_heads,
                 cfg.resolved_head_dim)
-    return {
+    quant = jnp.dtype(dtype) == jnp.int8
+    # recurrent state stays full-precision under int8 KV quantization (it is
+    # per-slot and constant-size — paging/quantizing it buys nothing)
+    conv_dtype = jnp.bfloat16 if quant else dtype
+    cache = {
         "state": jnp.zeros((g, k, num_slots, h, p, n), jnp.float32),
         "conv": jnp.zeros((g, k, num_slots, cfg.ssm_conv_width - 1, conv_dim),
-                          dtype),
+                          conv_dtype),
         "kp": jnp.zeros(kv_shape, dtype), "vp": jnp.zeros(kv_shape, dtype),
     }
+    if quant:
+        sshape = (g, num_pages, cfg.num_kv_heads)
+        cache["ks"] = jnp.zeros(sshape, jnp.float32)
+        cache["vs"] = jnp.zeros(sshape, jnp.float32)
+    return cache
 
 
 def _prefill_outer(params: Params, cfg: ModelConfig, s: int, b: int,
-                   kv_dtype, conv_dtype, use_kernel: bool, length, store_kv):
+                   kv_dtype, conv_dtype, use_kernel: bool, length, store_kv,
+                   page: int = 0, quant: bool = False):
     """The per-group prefill scan body shared by :func:`prefill` (contiguous
     cache) and :func:`prefill_paged` (page pool).  ``store_kv(kv, k, v)``
     writes the group's shared-attention K/V into whichever layout the caller
-    scans through; everything else is identical between the two paths."""
+    scans through; everything else is identical between the two paths.
+
+    ``quant`` (int8 page pool): in-pass attention sees K/V fake-quantized
+    through the per-page int8 grid while RAW values flow to ``store_kv``,
+    whose quantize-on-write recomputes the identical scales."""
     sp = params["shared_attn"]
     hd = cfg.resolved_head_dim
     pos = jnp.arange(s)
@@ -195,12 +209,18 @@ def _prefill_outer(params: Params, cfg: ModelConfig, s: int, b: int,
         if cfg.rope_theta > 0:
             q = L.apply_rope(q, pos, cfg.rope_theta)
             k = L.apply_rope(k, pos, cfg.rope_theta)
-        k = k.astype(kv_dtype)
-        v = v.astype(kv_dtype)
+        if quant:
+            k_raw, v_raw = k, v
+            k = L.quant_dequant_pages(k, page)
+            v = L.quant_dequant_pages(v, page)
+        else:
+            k = k.astype(kv_dtype)
+            v = v.astype(kv_dtype)
         a = L._sdpa(q, k, v, L.causal_window_mask(s, s))
         x = x + a.reshape(b, s, cfg.num_heads * hd) @ sp["attn"]["wo"]
         x = x + L.swiglu(sp["mlp"], L.rmsnorm(sp["ln2"], x, cfg.norm_eps))
-        return act.shard_hidden(x), (st_g, cw_g, store_kv(kv, k, v))
+        stored = store_kv(kv, k_raw, v_raw) if quant else store_kv(kv, k, v)
+        return act.shard_hidden(x), (st_g, cw_g, stored)
 
     return outer
 
@@ -213,6 +233,8 @@ def init_prefix_cache(cfg: ModelConfig, entries: int, dtype=jnp.bfloat16):
     g, k = _num_groups(cfg), cfg.shared_attn_every
     h, p, n = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state
     conv_dim = cfg.ssm_d_inner + 2 * n
+    if jnp.dtype(dtype) == jnp.int8:
+        dtype = jnp.bfloat16
     return {
         "state": jnp.zeros((g, k, entries, h, p, n), jnp.float32),
         "conv": jnp.zeros((g, k, entries, cfg.ssm_conv_width - 1, conv_dim),
@@ -256,27 +278,39 @@ def prefill_paged(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
     b, s, _ = h.shape
     page = cache["kp"].shape[2]
     npg = s // page
+    quant = "ks" in cache
     wrows = (block_rows[:, :npg] if start is None
              else L.suffix_write_rows(block_rows, start, npg, page))
 
-    def store_kv(kv, k, v):
-        pk, pv = kv
-        return (L.scatter_prefill_pages(pk, k, wrows),
-                L.scatter_prefill_pages(pv, v, wrows))
+    if quant:
+        def store_kv(kv, k, v):
+            pk, pv, sk, sv = kv
+            pk, sk = L.quant_scatter_prefill_pages(pk, sk, k, wrows)
+            pv, sv = L.quant_scatter_prefill_pages(pv, sv, v, wrows)
+            return (pk, pv, sk, sv)
+        kv0 = (cache["kp"], cache["vp"], cache["ks"], cache["vs"])
+    else:
+        def store_kv(kv, k, v):
+            pk, pv = kv
+            return (L.scatter_prefill_pages(pk, k, wrows),
+                    L.scatter_prefill_pages(pv, v, wrows))
+        kv0 = (cache["kp"], cache["vp"])
 
     outer = _prefill_outer(params, cfg, s, b, cache["kp"].dtype,
-                           cache["conv"].dtype, use_kernel, lengths, store_kv)
-    h, (ns, ncw, (nk, nv)) = lax.scan(
-        outer, act.shard_hidden(h), (params["layers"],
-                                     (cache["kp"], cache["vp"])))
+                           cache["conv"].dtype, use_kernel, lengths, store_kv,
+                           page=page, quant=quant)
+    h, (ns, ncw, nkv) = lax.scan(
+        outer, act.shard_hidden(h), (params["layers"], kv0))
     h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
     h = jnp.take_along_axis(h, (lengths - 1)[:, None, None], axis=1)
     logits = (h[:, 0, :] @ params["lm_head"]).astype(jnp.float32)
     new_cache = {
         "state": cache["state"].at[:, :, slots].set(ns, mode="drop"),
         "conv": cache["conv"].at[:, :, slots].set(ncw, mode="drop"),
-        "kp": nk, "vp": nv,
+        "kp": nkv[0], "vp": nkv[1],
     }
+    if quant:
+        new_cache["ks"], new_cache["vs"] = nkv[2], nkv[3]
     return logits, new_cache
 
 
@@ -295,25 +329,47 @@ def decode_step_paged(params: Params, cfg: ModelConfig, token: jnp.ndarray,
             lp, cfg, L.rmsnorm(lp["ln"], x, cfg.norm_eps), st, cw)
         return x + y, (st, cw)
 
+    quant = "ks" in cache
+
     def outer(carry, xs):
         x = carry
-        gp, st_g, cw_g, pk, pv = xs
+        if quant:
+            gp, st_g, cw_g, pk, pv, sk, sv = xs
+        else:
+            gp, st_g, cw_g, pk, pv = xs
         x, (st_g, cw_g) = lax.scan(inner, x, (gp, st_g, cw_g))
-        a, pk, pv = L.attention_decode_paged(
-            sp["attn"], L.rmsnorm(sp["ln1"], x, cfg.norm_eps), pk, pv,
-            block, pos, num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
-            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
-            use_kernel=use_kernel, write_block=write_block)
+        if quant:
+            a, pk, pv, sk, sv = L.attention_decode_paged(
+                sp["attn"], L.rmsnorm(sp["ln1"], x, cfg.norm_eps), pk, pv,
+                block, pos, num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+                use_kernel=use_kernel, write_block=write_block,
+                scale_k=sk, scale_v=sv)
+        else:
+            a, pk, pv = L.attention_decode_paged(
+                sp["attn"], L.rmsnorm(sp["ln1"], x, cfg.norm_eps), pk, pv,
+                block, pos, num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+                use_kernel=use_kernel, write_block=write_block)
         x = x + a
         x = x + L.swiglu(sp["mlp"], L.rmsnorm(sp["ln2"], x, cfg.norm_eps))
-        return x, (st_g, cw_g, pk, pv)
+        return x, ((st_g, cw_g, pk, pv, sk, sv) if quant
+                   else (st_g, cw_g, pk, pv))
 
-    h, (ns, ncw, nk, nv) = lax.scan(
-        outer, h, (params["layers"], cache["state"], cache["conv"],
-                   cache["kp"], cache["vp"]))
+    if quant:
+        h, (ns, ncw, nk, nv, nsk, nsv) = lax.scan(
+            outer, h, (params["layers"], cache["state"], cache["conv"],
+                       cache["kp"], cache["vp"], cache["ks"], cache["vs"]))
+    else:
+        h, (ns, ncw, nk, nv) = lax.scan(
+            outer, h, (params["layers"], cache["state"], cache["conv"],
+                       cache["kp"], cache["vp"]))
     h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
     logits = (h[:, 0, :] @ params["lm_head"]).astype(jnp.float32)
-    return logits, {"state": ns, "conv": ncw, "kp": nk, "vp": nv}
+    new_cache = {"state": ns, "conv": ncw, "kp": nk, "vp": nv}
+    if quant:
+        new_cache["ks"], new_cache["vs"] = nsk, nsv
+    return logits, new_cache
 
 
 def forward_chunk_paged(params: Params, cfg: ModelConfig,

@@ -305,8 +305,9 @@ def attention_decode_paged(params: Params, x: jnp.ndarray, pool_k: jnp.ndarray,
                            head_dim: int, rope_theta: float,
                            window: Optional[jnp.ndarray] = None,
                            use_kernel: bool = False,
-                           write_block: Optional[jnp.ndarray] = None
-                           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+                           write_block: Optional[jnp.ndarray] = None,
+                           scale_k: Optional[jnp.ndarray] = None,
+                           scale_v: Optional[jnp.ndarray] = None):
     """One-token decode against a PAGED KV pool (one layer's slice of it).
 
     x: (B, 1, D); pool_k/v: (P, page, K, Dh) — ONE physical allocation shared
@@ -326,12 +327,21 @@ def attention_decode_paged(params: Params, x: jnp.ndarray, pool_k: jnp.ndarray,
     — admission copy-on-writes any page a slot will append into, and the
     scheduler masks shared pages to the null page in ``write_block`` so a
     violated exclusivity invariant drops the write instead of corrupting a
-    co-resident request's cache.  Returns (out (B,1,D), pool_k, pool_v).
+    co-resident request's cache.
+
+    ``scale_k/v`` (P, K) fp32 mark the pools int8-quantized (per-page-
+    per-head symmetric scales): the append quantizes through a monotone
+    running-max page scale (see :func:`quant_append_page`) and the gather
+    dequantizes — fused into the Pallas kernel under ``use_kernel``.
+
+    Returns (out (B,1,D), pool_k, pool_v) — plus (scale_k, scale_v) when
+    quantized.
     """
     b = x.shape[0]
     page = pool_k.shape[1]
     n_pages = block.shape[1]
     s_tot = n_pages * page
+    quant = scale_k is not None
     q, k, v = _qkv(params, x, num_heads, num_kv, head_dim)
     if rope_theta > 0:
         pq = pos[:, None]                    # (B, 1) absolute positions
@@ -343,20 +353,29 @@ def attention_decode_paged(params: Params, x: jnp.ndarray, pool_k: jnp.ndarray,
     off = pos % page
     # duplicate (page 0) targets from idle slots race benignly: the null page
     # is never covered by any slot's positional mask
-    pool_k = pool_k.at[pg, off].set(k[:, 0].astype(pool_k.dtype), mode="drop")
-    pool_v = pool_v.at[pg, off].set(v[:, 0].astype(pool_v.dtype), mode="drop")
+    if quant:
+        pool_k, scale_k = quant_append_page(pool_k, scale_k, pg, off, k[:, 0])
+        pool_v, scale_v = quant_append_page(pool_v, scale_v, pg, off, v[:, 0])
+    else:
+        pool_k = pool_k.at[pg, off].set(k[:, 0].astype(pool_k.dtype),
+                                        mode="drop")
+        pool_v = pool_v.at[pg, off].set(v[:, 0].astype(pool_v.dtype),
+                                        mode="drop")
     kpos = jnp.arange(s_tot)[None, :]        # logical key positions per slot
     valid = kpos <= pos[:, None]
     if window is not None:
         valid = valid & (pos[:, None] - kpos < window)
     if use_kernel:
         from repro.kernels import ops as kops
-        out = kops.decode_attention_paged(q, pool_k, pool_v, block, valid)
+        out = kops.decode_attention_paged(q, pool_k, pool_v, block, valid,
+                                          scale_k, scale_v)
     else:
-        kk = pool_k[block].reshape(b, s_tot, num_kv, head_dim)
-        vv = pool_v[block].reshape(b, s_tot, num_kv, head_dim)
+        kk = dequant_gather(pool_k, scale_k, block, num_kv, head_dim)
+        vv = dequant_gather(pool_v, scale_v, block, num_kv, head_dim)
         out = _sdpa(q, kk, vv, valid[:, None, :])
     out = out.reshape(b, 1, num_heads * head_dim) @ params["wo"]
+    if quant:
+        return out, pool_k, pool_v, scale_k, scale_v
     return out, pool_k, pool_v
 
 
@@ -366,8 +385,9 @@ def attention_chunk_paged(params: Params, x: jnp.ndarray, pool_k: jnp.ndarray,
                           head_dim: int, rope_theta: float,
                           window: Optional[jnp.ndarray] = None,
                           use_kernel: bool = False,
-                          write_block: Optional[jnp.ndarray] = None
-                          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+                          write_block: Optional[jnp.ndarray] = None,
+                          scale_k: Optional[jnp.ndarray] = None,
+                          scale_v: Optional[jnp.ndarray] = None):
     """CHUNK attention against the paged KV pool: C tokens per slot at
     per-slot start positions — the multi-token generalisation of
     :func:`attention_decode_paged` that powers the unified chunked token lane
@@ -383,11 +403,19 @@ def attention_chunk_paged(params: Params, x: jnp.ndarray, pool_k: jnp.ndarray,
     (same K/V values: both paths round to the cache dtype before the read).
     Positions past the slot's page row write to the null page.
 
-    Returns (out (B, C, D'), pool_k, pool_v)."""
+    ``scale_k/v`` (P, K) fp32 mark the pools int8-quantized; the chunk's
+    appends quantize through a monotone running-max page scale (whole chunk
+    committed at the final scale — one rounding, vs the per-token path's
+    potential requant, which is why chunk-vs-steps equivalence is
+    tolerance-based under int8).
+
+    Returns (out (B, C, D'), pool_k, pool_v) — plus (scale_k, scale_v) when
+    quantized."""
     b, c, _ = x.shape
     page = pool_k.shape[1]
     n_pages = block.shape[1]
     s_tot = n_pages * page
+    quant = scale_k is not None
     q, k, v = _qkv(params, x, num_heads, num_kv, head_dim)
     positions = pos[:, None] + jnp.arange(c)[None, :]       # (B, C) absolute
     if rope_theta > 0:
@@ -399,8 +427,12 @@ def attention_chunk_paged(params: Params, x: jnp.ndarray, pool_k: jnp.ndarray,
     rows = jnp.arange(b)[:, None]
     pg = jnp.where(in_range, wb[rows, jnp.minimum(logical, n_pages - 1)], 0)
     off = positions % page
-    pool_k = pool_k.at[pg, off].set(k.astype(pool_k.dtype), mode="drop")
-    pool_v = pool_v.at[pg, off].set(v.astype(pool_v.dtype), mode="drop")
+    if quant:
+        pool_k, scale_k = quant_append_page(pool_k, scale_k, pg, off, k)
+        pool_v, scale_v = quant_append_page(pool_v, scale_v, pg, off, v)
+    else:
+        pool_k = pool_k.at[pg, off].set(k.astype(pool_k.dtype), mode="drop")
+        pool_v = pool_v.at[pg, off].set(v.astype(pool_v.dtype), mode="drop")
     kpos = jnp.arange(s_tot)[None, None, :]
     valid = kpos <= positions[:, :, None]                    # (B, C, S_tot)
     if window is not None:
@@ -408,13 +440,130 @@ def attention_chunk_paged(params: Params, x: jnp.ndarray, pool_k: jnp.ndarray,
     if use_kernel:
         from repro.kernels import ops as kops
         out = kops.decode_attention_chunk_paged(q, pool_k, pool_v, block,
-                                                valid)
+                                                valid, scale_k, scale_v)
     else:
-        kk = pool_k[block].reshape(b, s_tot, num_kv, head_dim)
-        vv = pool_v[block].reshape(b, s_tot, num_kv, head_dim)
+        kk = dequant_gather(pool_k, scale_k, block, num_kv, head_dim)
+        vv = dequant_gather(pool_v, scale_v, block, num_kv, head_dim)
         out = _sdpa(q, kk, vv, valid)
     out = out.reshape(b, c, num_heads * head_dim) @ params["wo"]
+    if quant:
+        return out, pool_k, pool_v, scale_k, scale_v
     return out, pool_k, pool_v
+
+
+# ---------------------------------------------------------------------------
+# int8 page quantization (per-page-per-head symmetric scales)
+# ---------------------------------------------------------------------------
+#
+# An int8 pool (P, page, K, Dh) carries a (P, K) fp32 scale tensor: one
+# symmetric scale per physical page per kv head, dequant = int8 * scale.
+# Write contract:
+#   * prefill overwrites whole pages -> scale rows use SET semantics
+#     (``quant_scatter_prefill_pages``), so stale scales from recycled pages
+#     never survive;
+#   * decode/chunk appends grow a page token-by-token -> the page scale is a
+#     MONOTONE running max (``quant_append_page``); growing it requantizes
+#     the page's existing content to the new grid (ratio <= 1, one extra
+#     rounding), and a token at page offset 0 resets the (recycled) scale
+#     first since the page has no live content yet.
+# Scale rows are indexed by physical page id exactly like pages, so COW /
+# truncate / eviction move them with ``cow_copy_scales`` alongside
+# ``cow_copy_pages`` and the refcount machinery never needs to know about
+# quantization.
+
+_QMAX = 127.0
+
+
+def _safe_scale(s: jnp.ndarray) -> jnp.ndarray:
+    return jnp.maximum(s, 1e-30)
+
+
+def quant_append_page(pool: jnp.ndarray, scale: jnp.ndarray, pg: jnp.ndarray,
+                      off: jnp.ndarray, val: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Append token K/V into an int8 pool at (pg, off) under a monotone
+    per-page-per-head running-max scale.
+
+    pool: (P, page, K, Dh) int8; scale: (P, K) fp32; pg/off: (...,) int32
+    (token -> physical page / in-page offset); val: (..., K, Dh).  Pages
+    whose scale grows are requantized to the new grid (duplicate pg entries
+    write identical bytes — ratio and gathered content agree — so chunked
+    appends race benignly, same as the null-page discipline).
+    """
+    v32 = val.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(v32), axis=-1)                   # (..., K)
+    # offset 0 == first write into a freshly allocated page: reset the
+    # recycled page's stale scale so it cannot poison this page's precision
+    # (off != 0 tokens harmlessly re-zero the never-dequant-read null page)
+    scale = scale.at[jnp.where(off == 0, pg, 0)].set(0.0, mode="drop")
+    old = scale[pg]                                           # (..., K)
+    scale = scale.at[pg].max(absmax / _QMAX, mode="drop")
+    new = scale[pg]
+    ratio = jnp.clip(_safe_scale(old) / _safe_scale(new), 0.0, 1.0)
+    repack = jnp.round(pool[pg].astype(jnp.float32)
+                       * ratio[..., None, :, None])
+    pool = pool.at[pg].set(repack.astype(pool.dtype), mode="drop")
+    q = jnp.clip(jnp.round(v32 / _safe_scale(new)[..., None]), -_QMAX, _QMAX)
+    pool = pool.at[pg, off].set(q.astype(pool.dtype), mode="drop")
+    return pool, scale
+
+
+def dequant_gather(pool: jnp.ndarray, scale: Optional[jnp.ndarray],
+                   block: jnp.ndarray, num_kv: int, head_dim: int
+                   ) -> jnp.ndarray:
+    """Gather a batch's pages as (B, n_pages * page, K, Dh), dequantizing
+    through the per-page scales when given (None = full-precision pool:
+    bitwise the plain gather)."""
+    b, npg = block.shape
+    gathered = pool[block]                       # (B, npg, page, K, Dh)
+    if scale is not None:
+        gathered = gathered.astype(jnp.float32) \
+            * scale[block][:, :, None, :, None]
+    return gathered.reshape(b, npg * pool.shape[1], num_kv, head_dim)
+
+
+def quant_dequant_pages(kv: jnp.ndarray, page: int) -> jnp.ndarray:
+    """Fake-quantize full-sequence K/V through the int8 per-page-per-head
+    grid: exactly the values a later paged read will dequantize to
+    (``quant_scatter_prefill_pages`` recomputes the identical scales from the
+    same raw values).  kv: (A, S, K, Dh) with S % page == 0."""
+    a, s = kv.shape[:2]
+    paged = kv.astype(jnp.float32).reshape(a, s // page, page, *kv.shape[2:])
+    sc = jnp.max(jnp.abs(paged), axis=(2, 4), keepdims=True) / _QMAX
+    q = jnp.clip(jnp.round(paged / _safe_scale(sc)), -_QMAX, _QMAX)
+    return (q * sc).reshape(kv.shape).astype(kv.dtype)
+
+
+def quant_scatter_prefill_pages(pool: jnp.ndarray, scale: jnp.ndarray,
+                                seq_kv: jnp.ndarray, block_rows: jnp.ndarray
+                                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantized :func:`scatter_prefill_pages`: write whole prefill pages
+    int8 with freshly computed per-page-per-head scales (SET semantics —
+    prefill owns the page, recycled scales are overwritten).  seq_kv carries
+    the RAW (pre-quantization) values; rows redirected to the null page
+    (padding / shared-prefix suffixing) drop both page and scale writes
+    there harmlessly."""
+    page = pool.shape[1]
+    a, s = seq_kv.shape[:2]
+    paged = seq_kv.astype(jnp.float32).reshape(a, s // page, page,
+                                               *seq_kv.shape[2:])
+    rows = block_rows[:, : s // page]
+    sc = jnp.max(jnp.abs(paged), axis=(2, 4)) / _QMAX         # (A, npg, K)
+    q = jnp.clip(jnp.round(paged / _safe_scale(sc)[:, :, None, :, None]),
+                 -_QMAX, _QMAX)
+    pool = pool.at[rows].set(q.astype(pool.dtype), mode="drop")
+    scale = scale.at[rows].set(sc, mode="drop")
+    return pool, scale
+
+
+def cow_copy_scales(scale: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray
+                    ) -> jnp.ndarray:
+    """Scale-row companion of :func:`cow_copy_pages`: scale (..., P, K) with
+    the page axis at ndim-2 (vs ndim-4 for pools); same (src, dst) pairs,
+    same null-page padding discipline."""
+    axis = scale.ndim - 2
+    idx = (slice(None),) * axis + (dst,)
+    return scale.at[idx].set(jnp.take(scale, src, axis=axis))
 
 
 def scatter_prefill_pages(pool: jnp.ndarray, seq_kv: jnp.ndarray,
@@ -449,8 +598,8 @@ def suffix_write_rows(block_rows: jnp.ndarray, start: jnp.ndarray,
 
 
 def substitute_prefix_kv(pool: jnp.ndarray, inpass: jnp.ndarray,
-                         block_rows: jnp.ndarray, start: jnp.ndarray
-                         ) -> jnp.ndarray:
+                         block_rows: jnp.ndarray, start: jnp.ndarray,
+                         scale: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Splice cached prefix K (or V) under the in-pass suffix values.
 
     pool: (P, page, Kh, Dh); inpass: (A, S, Kh, Dh); block_rows: (A, n_pages);
@@ -460,10 +609,18 @@ def substitute_prefix_kv(pool: jnp.ndarray, inpass: jnp.ndarray,
     positions >= start keep the in-pass values.  The result feeds the SAME
     attention as the non-sharing path, so suffix logits and suffix K/V are
     bitwise identical to a from-scratch prefill.
+
+    ``scale`` (P, K) marks the pool int8: cached pages dequantize through
+    their per-page scales (and ``inpass`` is expected fake-quantized through
+    the same grid — see :func:`quant_dequant_pages`).
     """
     a, s = inpass.shape[:2]
     page = pool.shape[1]
-    cached = pool[block_rows[:, : s // page]].reshape(a, s, *inpass.shape[2:])
+    rows = block_rows[:, : s // page]
+    cached = pool[rows]
+    if scale is not None:
+        cached = cached.astype(jnp.float32) * scale[rows][:, :, None, :, None]
+    cached = cached.reshape(a, s, *inpass.shape[2:])
     pos = jnp.arange(s)[None, :, None, None]
     return jnp.where(pos < start[:, None, None, None],
                      cached.astype(inpass.dtype), inpass)

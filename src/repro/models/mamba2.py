@@ -351,6 +351,11 @@ def init_paged_cache(cfg: ModelConfig, num_slots: int, num_pages: int,
     del num_pages, page_size
     h, p, n = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state
     conv_dim = cfg.ssm_d_inner + 2 * n
+    # int8 pool dtype only quantizes *paged KV*; the SSM has none, and its
+    # recurrent carry must stay full-precision, so the conv window falls back
+    # to bf16 (the state is always fp32).
+    if jnp.dtype(dtype) == jnp.int8:
+        dtype = jnp.bfloat16
     return {
         "state": jnp.zeros((cfg.num_layers, num_slots, h, p, n), jnp.float32),
         "conv": jnp.zeros((cfg.num_layers, num_slots, cfg.ssm_conv_width - 1,
@@ -365,6 +370,8 @@ def init_prefix_cache(cfg: ModelConfig, entries: int, dtype=jnp.bfloat16):
     prompt — the recurrent families' equivalent of aliasing every page."""
     h, p, n = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state
     conv_dim = cfg.ssm_d_inner + 2 * n
+    if jnp.dtype(dtype) == jnp.int8:
+        dtype = jnp.bfloat16
     return {
         "state": jnp.zeros((cfg.num_layers, entries, h, p, n), jnp.float32),
         "conv": jnp.zeros((cfg.num_layers, entries, cfg.ssm_conv_width - 1,

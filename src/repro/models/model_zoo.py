@@ -286,9 +286,12 @@ def gather_chunk_slots(cfg: ModelConfig, cache, slots: jnp.ndarray):
         return {"state": cache["state"][:, slots],
                 "conv": cache["conv"][:, slots]}
     if cfg.family == HYBRID:
-        return {"state": cache["state"][:, :, slots],
+        mini = {"state": cache["state"][:, :, slots],
                 "conv": cache["conv"][:, :, slots],
                 "kp": cache["kp"], "vp": cache["vp"]}
+        if "ks" in cache:
+            mini["ks"], mini["vs"] = cache["ks"], cache["vs"]
+        return mini
     return cache
 
 
@@ -306,11 +309,14 @@ def scatter_chunk_slots(cfg: ModelConfig, cache, mini, stage_sel,
                     conv=cache["conv"].at[:, slots].set(
                         stage_sel["conv"], mode="drop"))
     if cfg.family == HYBRID:
-        return dict(cache, kp=mini["kp"], vp=mini["vp"],
-                    state=cache["state"].at[:, :, slots].set(
-                        stage_sel["state"], mode="drop"),
-                    conv=cache["conv"].at[:, :, slots].set(
-                        stage_sel["conv"], mode="drop"))
+        merged = dict(cache, kp=mini["kp"], vp=mini["vp"],
+                      state=cache["state"].at[:, :, slots].set(
+                          stage_sel["state"], mode="drop"),
+                      conv=cache["conv"].at[:, :, slots].set(
+                          stage_sel["conv"], mode="drop"))
+        if "ks" in mini:
+            merged["ks"], merged["vs"] = mini["ks"], mini["vs"]
+        return merged
     return mini
 
 
@@ -407,10 +413,21 @@ def cow_pages(cfg: ModelConfig, cache, src: jnp.ndarray, dst: jnp.ndarray, *,
     from repro.models import layers as L
     if use_kernel:
         from repro.kernels import ops as kops
-        return dict(cache, kp=kops.copy_pages(cache["kp"], src, dst),
-                    vp=kops.copy_pages(cache["vp"], src, dst))
-    return dict(cache, kp=L.cow_copy_pages(cache["kp"], src, dst),
-                vp=L.cow_copy_pages(cache["vp"], src, dst))
+        out = dict(cache, kp=kops.copy_pages(cache["kp"], src, dst),
+                   vp=kops.copy_pages(cache["vp"], src, dst))
+        if "ks" in cache:
+            # scale rows move with their pages: copy_pages is shape/dtype
+            # generic, so the same scalar-prefetched kernel relocates the
+            # (L|G, P, K) fp32 scale tensors
+            out["ks"] = kops.copy_pages(cache["ks"], src, dst)
+            out["vs"] = kops.copy_pages(cache["vs"], src, dst)
+        return out
+    out = dict(cache, kp=L.cow_copy_pages(cache["kp"], src, dst),
+               vp=L.cow_copy_pages(cache["vp"], src, dst))
+    if "ks" in cache:
+        out["ks"] = L.cow_copy_scales(cache["ks"], src, dst)
+        out["vs"] = L.cow_copy_scales(cache["vs"], src, dst)
+    return out
 
 
 def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray, cache, *,

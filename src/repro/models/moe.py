@@ -342,7 +342,8 @@ def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
 
 
 def _prefill_body(cfg: ModelConfig, s: int, b: int, kv_dtype,
-                  capacity_factor: float, block_rows=None, start=None):
+                  capacity_factor: float, block_rows=None, start=None,
+                  page: int = 0, quant: bool = False):
     """The per-layer prefill scan body shared by :func:`prefill` (contiguous
     cache) and :func:`prefill_paged` (page pool).  Emits (k, v) per layer for
     the caller to store.
@@ -359,7 +360,9 @@ def _prefill_body(cfg: ModelConfig, s: int, b: int, kv_dtype,
     prefix = start is not None
 
     def body(carry, xs):
-        if prefix:
+        if prefix and quant:
+            lp, pk, pv, sk, sv = xs
+        elif prefix:
             lp, pk, pv = xs
         else:
             lp = xs
@@ -369,11 +372,22 @@ def _prefill_body(cfg: ModelConfig, s: int, b: int, kv_dtype,
         if cfg.rope_theta > 0:
             q = L.apply_rope(q, pos, cfg.rope_theta)
             k = L.apply_rope(k, pos, cfg.rope_theta)
-        k = k.astype(kv_dtype)
-        v = v.astype(kv_dtype)
-        if prefix:
-            k = L.substitute_prefix_kv(pk, k, block_rows, start)
-            v = L.substitute_prefix_kv(pv, v, block_rows, start)
+        if quant:
+            # in-pass attention sees the fake-quantized values later paged
+            # reads dequantize to; the RAW values are emitted for the
+            # caller's quantize-on-write (see transformer._prefill_body)
+            k_raw, v_raw = k, v
+            k = L.quant_dequant_pages(k, page)
+            v = L.quant_dequant_pages(v, page)
+            if prefix:
+                k = L.substitute_prefix_kv(pk, k, block_rows, start, sk)
+                v = L.substitute_prefix_kv(pv, v, block_rows, start, sv)
+        else:
+            k = k.astype(kv_dtype)
+            v = v.astype(kv_dtype)
+            if prefix:
+                k = L.substitute_prefix_kv(pk, k, block_rows, start)
+                v = L.substitute_prefix_kv(pv, v, block_rows, start)
         a = L._sdpa(q, k, v, mask)
         x = x + a.reshape(b, s, cfg.num_heads * hd) @ lp["attn"]["wo"]
         xn = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
@@ -382,7 +396,7 @@ def _prefill_body(cfg: ModelConfig, s: int, b: int, kv_dtype,
             y = y + L.swiglu(lp["shared"], xn)
         if "dense" in lp:
             y = y + L.swiglu(lp["dense"], xn)
-        return act.shard_hidden(x + y), (k, v)
+        return act.shard_hidden(x + y), ((k_raw, v_raw) if quant else (k, v))
 
     return body
 
@@ -417,19 +431,31 @@ def prefill_paged(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
     b, s, _ = h.shape
     page = cache["kp"].shape[2]
     npg = s // page
+    quant = "ks" in cache
     if start is None:
-        body = _prefill_body(cfg, s, b, cache["kp"].dtype, capacity_factor)
+        body = _prefill_body(cfg, s, b, cache["kp"].dtype, capacity_factor,
+                             page=page, quant=quant)
         h, (ks, vs) = lax.scan(body, h, params["layers"])
         wrows = block_rows[:, :npg]
     else:
         body = _prefill_body(cfg, s, b, cache["kp"].dtype, capacity_factor,
-                             block_rows, start)
-        h, (ks, vs) = lax.scan(body, h, (params["layers"],
-                                         cache["kp"], cache["vp"]))
+                             block_rows, start, page=page, quant=quant)
+        xs = (params["layers"], cache["kp"], cache["vp"])
+        if quant:
+            xs = xs + (cache["ks"], cache["vs"])
+        h, (ks, vs) = lax.scan(body, h, xs)
         wrows = L.suffix_write_rows(block_rows, start, npg, page)
     h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
     h = jnp.take_along_axis(h, (lengths - 1)[:, None, None], axis=1)
     logits = (h[:, 0, :] @ params["lm_head"]).astype(jnp.float32)
+    if quant:
+        new_k, new_sk = jax.vmap(
+            lambda p, sc, kv: L.quant_scatter_prefill_pages(p, sc, kv, wrows)
+        )(cache["kp"], cache["ks"], ks)
+        new_v, new_sv = jax.vmap(
+            lambda p, sc, kv: L.quant_scatter_prefill_pages(p, sc, kv, wrows)
+        )(cache["vp"], cache["vs"], vs)
+        return logits, {"kp": new_k, "vp": new_v, "ks": new_sk, "vs": new_sv}
     shape = ks.shape[:1] + (b, npg, page) + ks.shape[3:]
     new_k = cache["kp"].at[:, wrows].set(ks.reshape(shape), mode="drop")
     new_v = cache["vp"].at[:, wrows].set(vs.reshape(shape), mode="drop")
@@ -445,15 +471,25 @@ def decode_step_paged(params: Params, cfg: ModelConfig, token: jnp.ndarray,
     page = cache["kp"].shape[2]
     s_tot = block.shape[1] * page
     win = jnp.asarray(s_tot, jnp.int32)
+    quant = "ks" in cache
 
     def body(carry, xs):
         x = carry
-        lp, pk, pv = xs
-        a, pk, pv = L.attention_decode_paged(
-            lp["attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), pk, pv,
-            block, pos, num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
-            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
-            window=win, use_kernel=use_kernel, write_block=write_block)
+        if quant:
+            lp, pk, pv, sk, sv = xs
+            a, pk, pv, sk, sv = L.attention_decode_paged(
+                lp["attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), pk, pv,
+                block, pos, num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+                window=win, use_kernel=use_kernel, write_block=write_block,
+                scale_k=sk, scale_v=sv)
+        else:
+            lp, pk, pv = xs
+            a, pk, pv = L.attention_decode_paged(
+                lp["attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), pk, pv,
+                block, pos, num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+                window=win, use_kernel=use_kernel, write_block=write_block)
         x = x + a
         xn = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
         y, _ = moe_ffn_auto(lp, cfg, xn, capacity_factor)
@@ -461,12 +497,19 @@ def decode_step_paged(params: Params, cfg: ModelConfig, token: jnp.ndarray,
             y = y + L.swiglu(lp["shared"], xn)
         if "dense" in lp:
             y = y + L.swiglu(lp["dense"], xn)
-        return x + y, (pk, pv)
+        return x + y, ((pk, pv, sk, sv) if quant else (pk, pv))
 
-    h, (nk, nv) = lax.scan(body, h, (params["layers"], cache["kp"],
-                                     cache["vp"]))
+    if quant:
+        h, (nk, nv, nsk, nsv) = lax.scan(
+            body, h, (params["layers"], cache["kp"], cache["vp"],
+                      cache["ks"], cache["vs"]))
+    else:
+        h, (nk, nv) = lax.scan(body, h, (params["layers"], cache["kp"],
+                                         cache["vp"]))
     h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
     logits = (h[:, 0, :] @ params["lm_head"]).astype(jnp.float32)
+    if quant:
+        return logits, {"kp": nk, "vp": nv, "ks": nsk, "vs": nsv}
     return logits, {"kp": nk, "vp": nv}
 
 
@@ -487,15 +530,25 @@ def forward_chunk_paged(params: Params, cfg: ModelConfig,
     page = cache["kp"].shape[2]
     s_tot = block.shape[1] * page
     win = jnp.asarray(s_tot, jnp.int32)
+    quant = "ks" in cache
 
     def body(carry, xs):
         x = carry
-        lp, pk, pv = xs
-        a, pk, pv = L.attention_chunk_paged(
-            lp["attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), pk, pv,
-            block, pos, num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
-            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
-            window=win, use_kernel=use_kernel, write_block=write_block)
+        if quant:
+            lp, pk, pv, sk, sv = xs
+            a, pk, pv, sk, sv = L.attention_chunk_paged(
+                lp["attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), pk, pv,
+                block, pos, num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+                window=win, use_kernel=use_kernel, write_block=write_block,
+                scale_k=sk, scale_v=sv)
+        else:
+            lp, pk, pv = xs
+            a, pk, pv = L.attention_chunk_paged(
+                lp["attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), pk, pv,
+                block, pos, num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+                window=win, use_kernel=use_kernel, write_block=write_block)
         x = x + a
         xn = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
         y, _ = moe_ffn_auto(lp, cfg, xn, capacity_factor)
@@ -503,12 +556,19 @@ def forward_chunk_paged(params: Params, cfg: ModelConfig,
             y = y + L.swiglu(lp["shared"], xn)
         if "dense" in lp:
             y = y + L.swiglu(lp["dense"], xn)
-        return x + y, (pk, pv)
+        return x + y, ((pk, pv, sk, sv) if quant else (pk, pv))
 
-    h, (nk, nv) = lax.scan(body, h, (params["layers"], cache["kp"],
-                                     cache["vp"]))
+    if quant:
+        h, (nk, nv, nsk, nsv) = lax.scan(
+            body, h, (params["layers"], cache["kp"], cache["vp"],
+                      cache["ks"], cache["vs"]))
+    else:
+        h, (nk, nv) = lax.scan(body, h, (params["layers"], cache["kp"],
+                                         cache["vp"]))
     h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
     logits = (h @ params["lm_head"]).astype(jnp.float32)
+    if quant:
+        return logits, {"kp": nk, "vp": nv, "ks": nsk, "vs": nsv}, {}
     return logits, {"kp": nk, "vp": nv}, {}
 
 

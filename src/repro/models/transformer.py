@@ -277,7 +277,8 @@ def decode_step_split(params: Params, cfg: ModelConfig, token: jnp.ndarray,
 
 
 def _prefill_body(cfg: ModelConfig, s: int, b: int, kv_dtype,
-                  block_rows=None, start=None):
+                  block_rows=None, start=None, page: int = 0,
+                  quant: bool = False):
     """The per-layer prefill scan body shared by :func:`prefill` (contiguous
     cache) and :func:`prefill_paged` (page pool): K/V are rounded to the
     cache dtype *before* the in-pass attention so logits and cache match the
@@ -289,11 +290,21 @@ def _prefill_body(cfg: ModelConfig, s: int, b: int, kv_dtype,
     layer's page pool and splices cached-prefix K/V under the in-pass values
     (``layers.substitute_prefix_kv``) — the spliced tensor holds bitwise the
     values a from-scratch prefill would compute, so suffix K/V and
-    last-position logits are bitwise identical to the non-sharing path."""
+    last-position logits are bitwise identical to the non-sharing path.
+
+    ``quant`` (int8 page pool): the in-pass attention sees K/V FAKE-quantized
+    through the per-page int8 grid (``layers.quant_dequant_pages`` — the
+    exact values later paged reads dequantize to), while the RAW values are
+    emitted for the caller's ``quant_scatter_prefill_pages`` write, which
+    recomputes the identical scales — no double rounding.  With prefix
+    sharing the scan additionally carries the scale tensors to dequantize
+    the spliced cached prefix."""
     prefix = start is not None
 
     def body(carry, xs):
-        if prefix:
+        if prefix and quant:
+            lp, win, pk, pv, sk, sv = xs
+        elif prefix:
             lp, win, pk, pv = xs
         else:
             lp, win = xs
@@ -305,11 +316,19 @@ def _prefill_body(cfg: ModelConfig, s: int, b: int, kv_dtype,
             pos = jnp.arange(s)
             q = L.apply_rope(q, pos, cfg.rope_theta)
             k = L.apply_rope(k, pos, cfg.rope_theta)
-        k = k.astype(kv_dtype)
-        v = v.astype(kv_dtype)
-        if prefix:
-            k = L.substitute_prefix_kv(pk, k, block_rows, start)
-            v = L.substitute_prefix_kv(pv, v, block_rows, start)
+        if quant:
+            k_raw, v_raw = k, v
+            k = L.quant_dequant_pages(k, page)
+            v = L.quant_dequant_pages(v, page)
+            if prefix:
+                k = L.substitute_prefix_kv(pk, k, block_rows, start, sk)
+                v = L.substitute_prefix_kv(pv, v, block_rows, start, sv)
+        else:
+            k = k.astype(kv_dtype)
+            v = v.astype(kv_dtype)
+            if prefix:
+                k = L.substitute_prefix_kv(pk, k, block_rows, start)
+                v = L.substitute_prefix_kv(pv, v, block_rows, start)
         qc = 512 if (s > 512 and s % 512 == 0) else s
         if s > qc:
             a = L.chunked_attention(q, k, v, q_chunk=qc, causal=True, window=win)
@@ -319,7 +338,7 @@ def _prefill_body(cfg: ModelConfig, s: int, b: int, kv_dtype,
         a = a.reshape(b, s, cfg.num_heads * cfg.resolved_head_dim) @ lp["attn"]["wo"]
         x = x + a
         m = L.swiglu(lp["mlp"], L.rmsnorm(lp["ln2"], x, cfg.norm_eps))
-        return x + m, (k, v)
+        return x + m, ((k_raw, v_raw) if quant else (k, v))
 
     return body
 
@@ -341,7 +360,14 @@ def init_paged_cache(cfg: ModelConfig, num_slots: int, num_pages: int,
     del num_slots                       # attention state lives in pages only
     shape = (cfg.num_layers, num_pages, page_size, cfg.num_kv_heads,
              cfg.resolved_head_dim)
-    return {"kp": jnp.zeros(shape, dtype), "vp": jnp.zeros(shape, dtype)}
+    cache = {"kp": jnp.zeros(shape, dtype), "vp": jnp.zeros(shape, dtype)}
+    if jnp.dtype(dtype) == jnp.int8:
+        # symmetric per-page-per-head scales ride beside the int8 pools in
+        # the same donated cache pytree (dequant = int8 * scale)
+        sshape = (cfg.num_layers, num_pages, cfg.num_kv_heads)
+        cache["ks"] = jnp.zeros(sshape, jnp.float32)
+        cache["vs"] = jnp.zeros(sshape, jnp.float32)
+    return cache
 
 
 def prefill_paged(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
@@ -378,18 +404,34 @@ def prefill_paged(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
     windows = layer_windows(cfg, s)
     page = cache["kp"].shape[2]
     npg = s // page
+    quant = "ks" in cache
     if start is None:
-        body = _prefill_body(cfg, s, b, cache["kp"].dtype)
+        body = _prefill_body(cfg, s, b, cache["kp"].dtype, page=page,
+                             quant=quant)
         h, (ks, vs) = lax.scan(body, h, (params["layers"], windows))
         wrows = block_rows[:, :npg]
     else:
-        body = _prefill_body(cfg, s, b, cache["kp"].dtype, block_rows, start)
-        h, (ks, vs) = lax.scan(body, h, (params["layers"], windows,
-                                         cache["kp"], cache["vp"]))
+        body = _prefill_body(cfg, s, b, cache["kp"].dtype, block_rows, start,
+                             page=page, quant=quant)
+        xs = (params["layers"], windows, cache["kp"], cache["vp"])
+        if quant:
+            xs = xs + (cache["ks"], cache["vs"])
+        h, (ks, vs) = lax.scan(body, h, xs)
         wrows = L.suffix_write_rows(block_rows, start, npg, page)
     h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
     h = jnp.take_along_axis(h, (lengths - 1)[:, None, None], axis=1)
     logits = (h[:, 0, :] @ params["lm_head"]).astype(jnp.float32)
+    if quant:
+        # per-layer quantize + scatter (vmapped over the leading L axis);
+        # scales are recomputed from the same raw values the in-pass
+        # fake-quant used, so in-pass and later paged reads agree
+        new_k, new_sk = jax.vmap(
+            lambda p, sc, kv: L.quant_scatter_prefill_pages(p, sc, kv, wrows)
+        )(cache["kp"], cache["ks"], ks)
+        new_v, new_sv = jax.vmap(
+            lambda p, sc, kv: L.quant_scatter_prefill_pages(p, sc, kv, wrows)
+        )(cache["vp"], cache["vs"], vs)
+        return logits, {"kp": new_k, "vp": new_v, "ks": new_sk, "vs": new_sv}
     # ks: (L, A, S, K, Dh) -> every layer's pages in one scatter
     shape = ks.shape[:1] + (b, npg, page) + ks.shape[3:]
     new_k = cache["kp"].at[:, wrows].set(ks.reshape(shape), mode="drop")
@@ -412,9 +454,21 @@ def decode_step_paged(params: Params, cfg: ModelConfig, token: jnp.ndarray,
     page = cache["kp"].shape[2]
     s_tot = block.shape[1] * page
     windows = layer_windows(cfg, s_tot)
+    quant = "ks" in cache
 
     def body(carry, xs):
         x = carry
+        if quant:
+            lp, pk, pv, sk, sv, win = xs
+            a, pk, pv, sk, sv = L.attention_decode_paged(
+                lp["attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), pk, pv,
+                block, pos, num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+                window=win, use_kernel=use_kernel, write_block=write_block,
+                scale_k=sk, scale_v=sv)
+            x = x + a
+            m = L.swiglu(lp["mlp"], L.rmsnorm(lp["ln2"], x, cfg.norm_eps))
+            return x + m, (pk, pv, sk, sv)
         lp, pk, pv, win = xs
         a, pk, pv = L.attention_decode_paged(
             lp["attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), pk, pv,
@@ -425,10 +479,17 @@ def decode_step_paged(params: Params, cfg: ModelConfig, token: jnp.ndarray,
         m = L.swiglu(lp["mlp"], L.rmsnorm(lp["ln2"], x, cfg.norm_eps))
         return x + m, (pk, pv)
 
-    h, (nk, nv) = lax.scan(body, h, (params["layers"], cache["kp"],
-                                     cache["vp"], windows))
+    if quant:
+        h, (nk, nv, nsk, nsv) = lax.scan(
+            body, h, (params["layers"], cache["kp"], cache["vp"],
+                      cache["ks"], cache["vs"], windows))
+    else:
+        h, (nk, nv) = lax.scan(body, h, (params["layers"], cache["kp"],
+                                         cache["vp"], windows))
     h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
     logits = (h[:, 0, :] @ params["lm_head"]).astype(jnp.float32)
+    if quant:
+        return logits, {"kp": nk, "vp": nv, "ks": nsk, "vs": nsv}
     return logits, {"kp": nk, "vp": nv}
 
 
@@ -454,9 +515,21 @@ def forward_chunk_paged(params: Params, cfg: ModelConfig,
     page = cache["kp"].shape[2]
     s_tot = block.shape[1] * page
     windows = layer_windows(cfg, s_tot)
+    quant = "ks" in cache
 
     def body(carry, xs):
         x = carry
+        if quant:
+            lp, pk, pv, sk, sv, win = xs
+            a, pk, pv, sk, sv = L.attention_chunk_paged(
+                lp["attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), pk, pv,
+                block, pos, num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+                window=win, use_kernel=use_kernel, write_block=write_block,
+                scale_k=sk, scale_v=sv)
+            x = x + a
+            m = L.swiglu(lp["mlp"], L.rmsnorm(lp["ln2"], x, cfg.norm_eps))
+            return x + m, (pk, pv, sk, sv)
         lp, pk, pv, win = xs
         a, pk, pv = L.attention_chunk_paged(
             lp["attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), pk, pv,
@@ -467,10 +540,17 @@ def forward_chunk_paged(params: Params, cfg: ModelConfig,
         m = L.swiglu(lp["mlp"], L.rmsnorm(lp["ln2"], x, cfg.norm_eps))
         return x + m, (pk, pv)
 
-    h, (nk, nv) = lax.scan(body, h, (params["layers"], cache["kp"],
-                                     cache["vp"], windows))
+    if quant:
+        h, (nk, nv, nsk, nsv) = lax.scan(
+            body, h, (params["layers"], cache["kp"], cache["vp"],
+                      cache["ks"], cache["vs"], windows))
+    else:
+        h, (nk, nv) = lax.scan(body, h, (params["layers"], cache["kp"],
+                                         cache["vp"], windows))
     h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
     logits = (h @ params["lm_head"]).astype(jnp.float32)
+    if quant:
+        return logits, {"kp": nk, "vp": nv, "ks": nsk, "vs": nsv}, {}
     return logits, {"kp": nk, "vp": nv}, {}
 
 

@@ -424,7 +424,8 @@ class HIEngine:
                      prefix_sharing: bool = True, prefix_entries: int = None,
                      chunk_prefill: bool = False, chunk_size: int = 8,
                      chunk_width: int = 2, speculative: bool = False,
-                     faults=None, retry=None, validate: bool = False,
+                     kv_dtype: str = "bf16", faults=None, retry=None,
+                     validate: bool = False,
                      telemetry=None) -> Dict[int, Dict[str, np.ndarray]]:
         """Continuous-batching entry point: serve ``requests`` (an iterable of
         ``batcher.Request``) through slot-level admission over the paged KV
@@ -466,6 +467,14 @@ class HIEngine:
         Speculative acceptance is GREEDY-ONLY for now — any sampling
         temperature raises NotImplementedError (rejection sampling is future
         work).
+
+        ``kv_dtype`` selects the page-pool storage format for both tiers:
+        ``"bf16"`` (default, bitwise-identical to the unquantized build) or
+        ``"int8"`` — quantized pages with per-page-per-head scales and
+        dequantization fused into the page-gather kernels, roughly halving
+        KV bytes per slot at a small greedy-fidelity cost (tolerance-based
+        rather than bitwise equivalence).  Still one executable and one
+        host sync per tick in either mode.
 
         Failure semantics: ``faults`` (a ``serving.faults.FaultSchedule``)
         injects deterministic, seeded ED↔ES transport faults — escalation
@@ -516,7 +525,7 @@ class HIEngine:
                     "sampling (future work)")
         key = (tuple(sorted(buckets)), num_slots, l_slots, page_size,
                admit_width, decode_block, prefix_sharing, prefix_entries,
-               chunk_prefill, chunk_size, chunk_width, speculative)
+               chunk_prefill, chunk_size, chunk_width, speculative, kv_dtype)
         if self._stream is None or self._stream[0] != key:
             sched = ContinuousScheduler(
                 self.s, self.l, self.hi, max_prompt_len=max(buckets),
@@ -527,7 +536,8 @@ class HIEngine:
                 prefix_sharing=prefix_sharing,
                 prefix_entries=prefix_entries,
                 chunk_prefill=chunk_prefill, chunk_size=chunk_size,
-                chunk_width=chunk_width, speculative=speculative)
+                chunk_width=chunk_width, speculative=speculative,
+                kv_dtype=kv_dtype)
             self._stream = (key, sched)
             self.stats["stream_compiles"] += sched.stats["compiles"]
         sched = self._stream[1]

@@ -51,6 +51,22 @@ Page 0 is the NULL page: freed block-table rows and idle slots point at it,
 it receives the (benign, raced) writes of idle slots, and no positional mask
 ever exposes its contents.
 
+QUANTIZED POOLS (``dtype=jnp.int8``): the K/V pages are stored as int8 with
+symmetric per-page-per-head fp32 scales.  The scale tensors (``ks``/``vs``,
+shape ``(L, num_pages, K)``) live in the SAME ``buffers`` pytree as the page
+pools — they are part of the one donated allocation and move with it through
+every tick.  Scale rows are indexed by PHYSICAL page, so everything the
+allocator does to a page (alias, COW copy, free, evict) applies to its scale
+row by construction: aliasing shares the row, ``copy_pages`` moves it with
+the page (the kernel is rank/dtype generic), and freeing leaves it stale but
+unobservable — the first write into a recycled page resets its scale before
+quantizing (prefill overwrites it wholesale; the decode append zeroes it at
+page offset 0).  Dequantization is fused into the Pallas page-gather kernels
+(a ``(1, 1)`` scale block rides the same block-table index_map as its page),
+so the gathered K/V never exists in HBM at full precision.  The bf16 default
+keeps the cache pytree exactly ``{"kp", "vp"}`` — bitwise identical to the
+unquantized build.
+
 SSM-family tiers have constant-size per-slot state instead of pages; the
 pool still tracks slot occupancy through the same interface so the scheduler
 is family-agnostic (the block table is simply ignored by the SSM decode),
@@ -65,6 +81,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels.decode_attention import MAX_PREFETCH_PAGES
 from repro.models import model_zoo
 
 
@@ -132,6 +149,16 @@ class KVPool:
         self.num_slots = num_slots
         self.page_size = page_size
         self.n_pages_per_slot = max_context // page_size
+        if self.n_pages_per_slot > MAX_PREFETCH_PAGES:
+            # the decode kernels scalar-prefetch one block-table row into
+            # SMEM; a wider row than the kernels' bound would silently read
+            # out of the prefetch block, so fail loudly at construction —
+            # every alloc/admit_prefix row is bounded by n_pages_per_slot
+            raise ValueError(
+                f"max_context {max_context} / page_size {page_size} implies "
+                f"a {self.n_pages_per_slot}-page block-table row, wider than "
+                f"the kernels' scalar-prefetch bound MAX_PREFETCH_PAGES="
+                f"{MAX_PREFETCH_PAGES}; raise page_size or lower max_context")
         if num_pages is None:
             # enough for every slot to hold a full-context sequence, + null
             num_pages = num_slots * self.n_pages_per_slot + 1
@@ -140,6 +167,14 @@ class KVPool:
         self.num_pages = num_pages
         self.buffers = model_zoo.init_paged_cache(cfg, num_slots, num_pages,
                                                   page_size, dtype)
+        self.kv_dtype = str(jnp.dtype(dtype))
+        # byte accounting over the donated pool allocation (pages + scale
+        # rows + recurrent state), fixed at construction — gauges() reports
+        # these without touching the device
+        self.kv_bytes_total = int(sum(
+            int(np.prod(b.shape)) * jnp.dtype(b.dtype).itemsize
+            for b in self.buffers.values()))
+        self.bytes_per_slot = self.kv_bytes_total // num_slots
         self.prefix_entries = prefix_entries
         self.prefix_buffers = (
             model_zoo.init_prefix_cache(cfg, prefix_entries, dtype)
@@ -171,6 +206,11 @@ class KVPool:
             "refcount_total": int(self._refs.sum()),
             "prefix_index": len(self._page_index) + len(self._full_index),
             "cow_copies": self.stats["cow_copies"],
+            # pool-footprint gauges (constant per pool; numeric so the
+            # Chrome-trace exporter tracks them as counter series)
+            "kv_bytes_total": self.kv_bytes_total,
+            "bytes_per_slot": self.bytes_per_slot,
+            "kv_bits": 8 if self.kv_dtype == "int8" else 16,
         }
 
     @property
@@ -522,7 +562,28 @@ class KVPool:
     def check_invariants(self) -> None:
         """Debug/test hook: refcount conservation — every page's refcount
         equals its slot references + index retentions, free pages carry no
-        references, and live + free pages partition the pool."""
+        references, and live + free pages partition the pool.  Quantized
+        pools additionally check scale-row accounting: every page pool has
+        fp32 scale tensors with one row per PHYSICAL page, so every
+        allocator move of a page implicitly moves its scale row."""
+        if "ks" in self.buffers:
+            for pool_key, scale_key in (("kp", "ks"), ("vp", "vs")):
+                pool, scale = self.buffers[pool_key], self.buffers[scale_key]
+                assert jnp.dtype(pool.dtype) == jnp.int8, \
+                    f"quantized pool {pool_key} must be int8, got {pool.dtype}"
+                assert jnp.dtype(scale.dtype) == jnp.float32, \
+                    f"scale {scale_key} must be fp32, got {scale.dtype}"
+                # pools are (..., P, page, K, Dh), scales (..., P, K): one
+                # scale row per physical page and head
+                assert scale.shape[-2] == self.num_pages, \
+                    f"scale {scale_key} has {scale.shape[-2]} rows for " \
+                    f"{self.num_pages} pages"
+                assert scale.shape[:-2] == pool.shape[:-4] and \
+                    scale.shape[-1] == pool.shape[-2], \
+                    f"scale {scale_key} shape {scale.shape} does not match " \
+                    f"pool {pool_key} shape {pool.shape}"
+        else:
+            assert "vs" not in self.buffers, "vs scale without ks"
         refs = np.zeros((self.num_pages,), np.int32)
         slot_refs = np.zeros((self.num_pages,), np.int32)
         for pages in self._slot_pages.values():

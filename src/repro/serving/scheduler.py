@@ -673,6 +673,10 @@ class ContinuousScheduler:
     chunk lane (C tokens per tick, interleaved with decode).  ``speculative``
     fuses the S→L draft-verify token cascade into the tick (greedy-only;
     both tiers admit every request at the same slot index).
+    ``kv_dtype="int8"`` stores both tiers' KV pages quantized (int8 with
+    per-page-per-head scales, dequantization fused into the page-gather
+    kernels) at roughly half the pool bytes; the default ``"bf16"`` keeps
+    every bitwise invariant of the unquantized build.
 
     Telemetry (``serving/telemetry.py``)
     ------------------------------------
@@ -707,10 +711,20 @@ class ContinuousScheduler:
                  prefix_entries: Optional[int] = None,
                  num_pages: Optional[int] = None,
                  chunk_prefill: bool = False, chunk_size: int = 8,
-                 chunk_width: int = 2, speculative: bool = False):
+                 chunk_width: int = 2, speculative: bool = False,
+                 kv_dtype: str = "bf16"):
         if max_prompt_len % page_size:
             raise ValueError(f"max_prompt_len {max_prompt_len} must be a "
                              f"multiple of page_size {page_size}")
+        if kv_dtype not in ("bf16", "int8"):
+            raise ValueError(f"kv_dtype must be 'bf16' or 'int8', "
+                             f"got {kv_dtype!r}")
+        if kv_dtype == "int8":
+            # quantized page pools: int8 pages + per-page-per-head fp32
+            # scales, dequant fused into the page-gather kernels.  bf16 (the
+            # default) keeps every bitwise invariant of the unquantized build.
+            cache_dtype = jnp.int8
+        self.kv_dtype = kv_dtype
         if chunk_prefill and chunk_size < 1:
             raise ValueError(f"chunk_size {chunk_size} must be >= 1")
         self.s = s_tier

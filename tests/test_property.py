@@ -134,3 +134,50 @@ def test_confidence_ranges(n, c, seed):
     # max_prob lower bound: 1/C
     mp = np.asarray(confidence(logits, "max_prob"))
     assert (mp >= 1.0 / c - 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# quantized pool: allocator invariants with scale rows attached
+# ---------------------------------------------------------------------------
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "free", "admit",
+                                           "truncate"]),
+                          st.integers(0, 3),
+                          st.sampled_from([8, 12, 16, 20])),
+                min_size=1, max_size=25),
+       st.integers(0, 5))
+def test_int8_pool_invariants_under_random_ops(ops, nprompts):
+    """Random alloc / free / prefix-admission (aliasing, COW tail pages,
+    eviction) / truncate sequences on an int8 pool keep every refcount
+    invariant PLUS the scale-row accounting (`check_invariants` asserts the
+    fp32 scale tensors stay one-row-per-physical-page beside the int8
+    pools).  Hashed prompts repeat, so admissions alias retained pages and
+    non-page-aligned buckets schedule COW copies."""
+    from repro.configs.registry import ARCHS
+    from repro.serving.kv_pool import KVPool
+
+    cfg = ARCHS["qwen2-1.5b"].reduced()
+    pool = KVPool(cfg, num_slots=4, max_context=32, page_size=8,
+                  dtype=jnp.int8, prefix_entries=2)
+    pool.check_invariants()
+    for tick, (op, slot, bucket) in enumerate(ops):
+        try:
+            if op == "alloc":
+                pool.alloc(slot, bucket + 4, tick=tick)
+            elif op == "free":
+                pool.free(slot)
+            elif op == "admit":
+                # small prompt-identity space -> repeats hit the index;
+                # 12/20 buckets have partial tail pages -> COW on restore
+                pid = (slot + bucket) % max(nprompts + 1, 1)
+                hashes = [bytes([pid, i]) for i in range(4)]
+                full = bytes([pid, 0xFF, bucket])
+                pool.admit_prefix(slot, bucket + 4, bucket, hashes, full,
+                                  tick)
+            elif op == "truncate":
+                pool.truncate(slot, bucket)
+        except ValueError:
+            pass          # exhaustion / double-free / shared-page rewind
+        pool.check_invariants()
+    for slot in list(pool.held_slots):
+        pool.free(slot)
+    pool.check_invariants()
