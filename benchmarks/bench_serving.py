@@ -87,12 +87,20 @@ with S→L flow arrows — loadable in chrome://tracing or Perfetto.
   PYTHONPATH=src python -m benchmarks.bench_serving --quant-smoke
                     # gate: int8 pool <= 0.55x bf16 bytes, >= 99% greedy
                     # top-1 agreement, 1 compiled shape per dtype
+  PYTHONPATH=src python -m benchmarks.bench_serving --audit-smoke
+                    # gate: decision-audit stream token-identical, bins ==
+                    # p_histogram oracle, <2% overhead, ECE reported
+
+Full runs append a compact per-run ``history`` entry (git rev, date, req/s
+per scenario) into the output JSON instead of clobbering the trajectory —
+cross-PR perf lives in ``BENCH_serving.json``.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import pathlib
+import subprocess
 import time
 
 import jax
@@ -102,10 +110,13 @@ import numpy as np
 from benchmarks.common import emit
 from repro.configs.base import HIConfig
 from repro.configs.registry import ARCHS
+from repro.core.calibrate import p_histogram
 from repro.models import model_zoo
+from repro.serving.audit import GateAudit
 from repro.serving.batcher import Batcher, Request, pad_to_bucket
 from repro.serving.engine import build_engine
 from repro.serving.faults import STATUSES, FaultSchedule, RetryPolicy
+from repro.serving.flight_recorder import FlightRecorder
 from repro.serving.telemetry import Telemetry
 from repro.serving.trace_export import chrome_trace, write_chrome_trace
 
@@ -740,14 +751,83 @@ def run_telemetry_smoke(trace_out: str | None = None) -> dict:
             "stream_compiled_shapes": 1, "trace_out": trace_out}
 
 
-def run_chaos_smoke() -> dict:
+def run_audit_smoke(trace_out: str | None = None) -> dict:
+    """CI decision-audit gate (``--audit-smoke``): replay the smoke trace
+    with the :class:`GateAudit` stream ON and assert its zero-cost contract
+    — one compiled shape, greedy output token-identical to audit-off,
+    streaming reliability bins matching the ``core/calibrate.p_histogram``
+    NumPy oracle on the recorded decision stream, the ``hi_audit_*``
+    Prometheus families present, and req/s within the 2% overhead budget.
+    The running ECE is reported.  Exits nonzero (via AssertionError) on any
+    violation."""
+    cfg = ARCHS[ARCH].reduced()
+    eng = build_engine(cfg, HIConfig(theta=0.6, capacity_factor=1.0),
+                       max_new_tokens=4, cache_len=CACHE_LEN)
+    reqs = _poisson_mixed_requests(cfg, 16, 4)
+    for r in reqs:
+        r.tclass = ("interactive", "batch")[r.request_id % 2]
+    kw = dict(buckets=STREAM_BUCKETS, num_slots=4, l_slots=2,
+              page_size=PAGE_SIZE)
+    ref = eng.serve_stream(reqs, **kw)         # warm + reference tokens
+    aud = GateAudit()
+    tel = Telemetry()
+    out = eng.serve_stream(reqs, audit=aud, telemetry=tel, **kw)
+    assert eng.stats["stream_compiles"] == 1, "the audit changed a shape"
+    for rid, rec in out.items():
+        np.testing.assert_array_equal(rec["tokens"], ref[rid]["tokens"])
+    assert aud.decisions > 0, "the gate stream recorded nothing"
+    truthed = [r for r in aud.records if r.ok is not None]
+    assert truthed, "completed escalations must yield ground truth"
+    oracle = p_histogram(np.array([r.conf for r in truthed]),
+                         np.array([r.ok for r in truthed], np.float32),
+                         bins=aud.overall.bins)
+    np.testing.assert_array_equal(aud.overall.correct, oracle["correct"])
+    np.testing.assert_array_equal(aud.overall.incorrect,
+                                  oracle["incorrect"])
+    txt = tel.prometheus_text()
+    assert "hi_audit_ece" in txt and "hi_audit_decisions_total" in txt
+
+    def best(extra):
+        times = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            eng.serve_stream(reqs, **extra(), **kw)
+            times.append(time.perf_counter() - t0)
+        return min(times)
+
+    t_off = best(dict)
+    t_on = best(lambda: {"audit": GateAudit()})
+    overhead = max(0.0, t_on / t_off - 1.0)
+    assert overhead < 0.02, \
+        f"audit overhead {overhead:.2%} exceeds the 2% budget"
+    if trace_out:
+        write_chrome_trace(tel, trace_out)
+    emit("serving_audit_smoke", 0.0,
+         f"audit gate PASS: {aud.decisions} decisions, {aud.outcomes} "
+         f"ground-truthed, ECE {aud.ece():.4f}, offload rate "
+         f"{aud.offload_rate():.2f}, overhead {overhead:.2%} (< 2%), "
+         f"bins == p_histogram oracle, 1 compiled shape")
+    return {"requests": len(out), "decisions": aud.decisions,
+            "outcomes": aud.outcomes, "ece": aud.ece(),
+            "offload_rate": aud.offload_rate(),
+            "regret_cost": aud.regret_cost,
+            "overhead_frac": overhead,
+            "enabled_rps": len(reqs) / t_on,
+            "disabled_rps": len(reqs) / t_off,
+            "stream_compiled_shapes": 1, "trace_out": trace_out}
+
+
+def run_chaos_smoke(dump_out: str | None = None) -> dict:
     """CI chaos gate (``--chaos-smoke``): replay the smoke trace under
     seeded loss / outage / jitter schedules with PER-TICK pool invariants
     (``validate=True``) and assert the no-corruption property — every
     request terminates with exactly one valid-status record, S answers are
     token-identical to the fault-free run, degraded requests answer with
-    their S tokens, no page leaks, one compiled shape.  Exits nonzero (via
-    AssertionError) on any violation."""
+    their S tokens, no page leaks, one compiled shape.  A
+    :class:`FlightRecorder` rides every faulted run; the outage schedule
+    must freeze a breaker-open postmortem, written to ``dump_out`` (CI
+    uploads it as a workflow artifact when this gate fails).  Exits nonzero
+    (via AssertionError) on any violation."""
     cfg = ARCHS[ARCH].reduced()
     eng = build_engine(cfg, HIConfig(theta=0.6, capacity_factor=1.0),
                        max_new_tokens=4, cache_len=CACHE_LEN)
@@ -764,9 +844,11 @@ def run_chaos_smoke() -> dict:
         ("jitter", FaultSchedule(seed=3, delay_ticks=1, delay_jitter=2),
          RetryPolicy(ack_timeout_ticks=6)),
     ]
+    fr = FlightRecorder(capacity=16, path=dump_out)
     summary = {}
     for name, faults, retry in schedules:
-        out = eng.serve_stream(reqs, faults=faults, retry=retry, **kw)
+        out = eng.serve_stream(reqs, faults=faults, retry=retry,
+                               flight_recorder=fr, **kw)
         assert set(out) == {r.request_id for r in reqs}, name
         for rid, rec in out.items():
             assert rec["status"] in STATUSES, (name, rid, rec["status"])
@@ -788,10 +870,16 @@ def run_chaos_smoke() -> dict:
             counts[rec["status"]] = counts.get(rec["status"], 0) + 1
         summary[name] = counts
     assert eng.stats["stream_compiles"] == 1, "faults changed compiled shapes"
+    opens = [d for d in fr.dumps if d["reason"] == "breaker_open"]
+    assert opens, "the outage schedule must freeze a breaker-open dump"
     summary["stream_compiled_shapes"] = 1
+    summary["flight_recorder_dumps"] = [d["reason"] for d in fr.dumps]
+    summary["dump_out"] = dump_out
     emit("serving_chaos_smoke", 0.0,
          "chaos gate PASS: " + "; ".join(
-             f"{k} {v}" for k, v in summary.items() if isinstance(v, dict)))
+             f"{k} {v}" for k, v in summary.items() if isinstance(v, dict))
+         + f"; {len(fr.dumps)} flight-recorder dump(s)"
+         + (f" -> {dump_out}" if dump_out else ""))
     return summary
 
 
@@ -945,7 +1033,42 @@ def run(out_path: str = "BENCH_serving.json", smoke: bool = False,
         "smoke": smoke,
         "backend": jax.default_backend(),
     }
+    # -- longitudinal history: append this run instead of clobbering --------
+    # each entry pins the git rev + date + headline req/s per scenario so
+    # successive CI runs accumulate a regression series in one JSON file
     path = pathlib.Path(out_path)
+    history = []
+    if path.exists():
+        try:
+            prev = json.loads(path.read_text())
+            history = list(prev.get("history", []))
+        except (json.JSONDecodeError, OSError):
+            history = []
+    try:
+        rev = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=pathlib.Path(__file__).resolve().parent,
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        rev = "unknown"
+    history.append({
+        "rev": rev,
+        "date": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "smoke": smoke,
+        "rps": {
+            "new": result["new_rps"],
+            "legacy": result["legacy_rps"],
+            "stream": result["mixed_poisson"]["stream_rps"],
+            "drain": result["mixed_poisson"]["drain_rps"],
+            "prefix_sharing": repeated["sharing_rps"],
+            "chunked_prefill": long_prompt["chunked_rps"],
+            "speculative": speculative["speculative_rps"],
+            "outage": outage["outage_rps"],
+            "kv_int8": kv_quant["int8_rps"],
+        },
+    })
+    result["history"] = history
     path.write_text(json.dumps(result, indent=2) + "\n")
 
     m = result["mixed_poisson"]
@@ -1023,6 +1146,16 @@ def main():
                     help="telemetry gate: span-tree completeness, terminal "
                          "statuses matching result records, one compiled "
                          "shape, and req/s overhead under the 2%% budget")
+    ap.add_argument("--audit-smoke", action="store_true",
+                    help="decision-audit gate: audit-on output token-"
+                         "identical to off with one compiled shape, "
+                         "streaming bins matching the p_histogram oracle, "
+                         "hi_audit_* Prometheus families present, and "
+                         "req/s overhead under the 2%% budget")
+    ap.add_argument("--dump-out", default=None, metavar="PATH",
+                    help="chaos-smoke: write the flight recorder's last "
+                         "postmortem dump here (CI uploads it as an "
+                         "artifact when the gate fails)")
     ap.add_argument("--quant-smoke", action="store_true",
                     help="kv-quant gate: int8 pool bytes <= 0.55x bf16 at "
                          "the same slot/page config, >= 99%% teacher-forced "
@@ -1033,11 +1166,13 @@ def main():
                          "JSON here (load in chrome://tracing or Perfetto)")
     args = ap.parse_args()
     if args.chaos_smoke:
-        r = run_chaos_smoke()
+        r = run_chaos_smoke(dump_out=args.dump_out)
     elif args.quant_smoke:
         r = run_quant_smoke()
     elif args.telemetry_smoke:
         r = run_telemetry_smoke(trace_out=args.trace_out)
+    elif args.audit_smoke:
+        r = run_audit_smoke(trace_out=args.trace_out)
     else:
         r = run(args.out, smoke=args.smoke, trace_out=args.trace_out)
     print(json.dumps(r, indent=2))

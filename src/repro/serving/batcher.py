@@ -31,6 +31,9 @@ class Request:
     eos_id: Optional[int] = None        # early stop (continuous path only)
     latency_budget: Optional[float] = None  # seconds; expired S->L escalations
     #                                       are dropped (the S answer stands)
+    tclass: str = ""                    # traffic class for per-class gate
+    #                                   audit aggregates (GateAudit); ""
+    #                                   buckets into the overall stream only
 
 
 @dataclass

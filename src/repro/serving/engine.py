@@ -425,8 +425,9 @@ class HIEngine:
                      chunk_prefill: bool = False, chunk_size: int = 8,
                      chunk_width: int = 2, speculative: bool = False,
                      kv_dtype: str = "bf16", faults=None, retry=None,
-                     validate: bool = False,
-                     telemetry=None) -> Dict[int, Dict[str, np.ndarray]]:
+                     validate: bool = False, telemetry=None, audit=None,
+                     watchdog=None,
+                     flight_recorder=None) -> Dict[int, Dict[str, np.ndarray]]:
         """Continuous-batching entry point: serve ``requests`` (an iterable of
         ``batcher.Request``) through slot-level admission over the paged KV
         pools instead of drained (B, bucket) batches.
@@ -505,6 +506,20 @@ class HIEngine:
         path.  Export via ``telemetry.prometheus_text()`` /
         ``histogram_summary()`` or ``serving.trace_export.chrome_trace``.
 
+        ``audit`` (a ``serving.audit.GateAudit``) installs the
+        decision-quality layer with the same contract: every gate decision
+        the scheduler absorbs (admit / chunk / decode / block / request)
+        is recorded with its theta-IN-EFFECT, the speculative verify lane
+        and completed escalations feed ground-truth outcomes, and the
+        streaming aggregates (reliability bins, per-``tclass`` ECE +
+        offload rate, theta margins, empirical regret) ride the existing
+        single host fetch — zero extra syncs, token-identical outputs.
+        ``watchdog`` (a ``serving.audit.SLOWatchdog``) evaluates SLO /
+        drift thresholds once per tick; ``flight_recorder`` (a
+        ``serving.flight_recorder.FlightRecorder``) keeps a bounded ring
+        of tick snapshots and dumps a deterministic postmortem JSON on
+        watchdog breach, breaker-open, invariant failure, or a stall.
+
         Returns per-request result records keyed by request_id.
         """
         from repro.serving.batcher import AdmissionQueue
@@ -546,7 +561,10 @@ class HIEngine:
         # first) — no per-key copy-and-zero, so the two can never diverge
         self.stats.attach(sched)
         sched.set_default_temperature(self.temperature)
+        sched.set_audit(audit)
         sched.set_telemetry(telemetry)
+        sched.set_watchdog(watchdog)
+        sched.set_flight_recorder(flight_recorder)
         from repro.serving.faults import NO_FAULTS, RetryPolicy
         sched.set_faults(faults if faults is not None else NO_FAULTS,
                          retry if retry is not None else RetryPolicy(),

@@ -1,0 +1,83 @@
+"""Flight recorder: a bounded ring of per-tick scheduler snapshots that
+dumps a deterministic postmortem JSON when something goes wrong.
+
+Before this module a misbehaving run died with a bare ``RuntimeError``
+("scheduler stalled") or a bare ``AssertionError`` out of
+``KVPool.check_invariants`` — the state that explained the failure (queue
+depths, breaker state, pool gauges, recent audit aggregates) was gone by the
+time anyone looked.  The recorder keeps the last ``capacity`` tick snapshots
+in a ``deque`` and freezes them the moment a trigger fires:
+
+* **breaker-open** — the circuit breaker transitioned to OPEN this tick;
+* **SLO breach** — the :class:`~repro.serving.audit.SLOWatchdog` tripped;
+* **invariant failure** — ``check_invariants`` raised (``validate=True``);
+* **stall** — the scheduler's idle-tick bound tripped.
+
+Snapshots are built by the scheduler from host state it already holds —
+recording costs no device traffic and nothing when not installed
+(``flight_recorder=None`` is the default, same contract as
+``telemetry=None``).
+
+Determinism: a snapshot carries tick index, typed counters (minus the
+wall-clock ``serve_time``), gauges, queue depth, and audit aggregates — all
+deterministic functions of the request trace + fault schedule, so a dump
+triggered by a seeded :class:`~repro.serving.faults.FaultSchedule` is
+byte-identical across runs (test-asserted).  Wall-clock phase timings are
+EXCLUDED unless ``include_timings=True`` (for humans; breaks byte-identity).
+
+``path`` (optional) writes the most recent dump as sorted-keys JSON — CI
+uploads it as a workflow artifact when a chaos gate fails.
+"""
+from __future__ import annotations
+
+import json
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+
+class FlightRecorder:
+    """Bounded tick-snapshot ring + postmortem dump trigger."""
+
+    def __init__(self, capacity: int = 64, path: Optional[str] = None,
+                 include_timings: bool = False):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self.ring: deque = deque(maxlen=self.capacity)
+        self.dumps: List[Dict[str, Any]] = []
+        self.path = path
+        self.include_timings = bool(include_timings)
+
+    def record(self, snapshot: Dict[str, Any]) -> None:
+        """Append one per-tick snapshot (the scheduler calls this once per
+        tick; the ring drops the oldest snapshot past ``capacity``)."""
+        self.ring.append(snapshot)
+
+    def trigger(self, reason: str, tick: int,
+                detail: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+        """Freeze the ring into a postmortem dump.  Returns the dump dict
+        (also appended to :attr:`dumps`; written to :attr:`path` when
+        configured — last trigger wins the file)."""
+        dump = {
+            "reason": reason,
+            "tick": int(tick),
+            "seq": len(self.dumps),
+            "detail": dict(detail) if detail else {},
+            "ring": [dict(s) for s in self.ring],
+        }
+        self.dumps.append(dump)
+        if self.path:
+            with open(self.path, "w") as f:
+                f.write(self.dump_json(dump))
+        return dump
+
+    @property
+    def last_dump(self) -> Optional[Dict[str, Any]]:
+        return self.dumps[-1] if self.dumps else None
+
+    @staticmethod
+    def dump_json(dump: Dict[str, Any]) -> str:
+        """Canonical serialization: sorted keys, fixed separators — two
+        dumps with equal content serialize byte-identically."""
+        return json.dumps(dump, sort_keys=True, indent=1,
+                          separators=(",", ": "), default=float) + "\n"

@@ -302,7 +302,8 @@ def _tier_tick_fn(cfg: ModelConfig, metric: str, use_kernel: bool,
                 out_toks = jnp.where(bonus, lv, toks.T)
                 out_confs = jnp.where(bonus, 1.0, confs.T)  # L-verified token
                 n_emit = jnp.where(esc & (m < k), m + 1, k)
-                return out_toks, out_confs, keep, accept, esc, n_emit, core
+                return (out_toks, out_confs, keep, accept, esc, n_emit,
+                        match, core)
 
             def v_idle(core):
                 return (jnp.zeros((b, k), jnp.int32),
@@ -310,12 +311,18 @@ def _tier_tick_fn(cfg: ModelConfig, metric: str, use_kernel: bool,
                         jnp.zeros((b,), jnp.int32),
                         jnp.zeros((b,), jnp.int32),
                         jnp.zeros((b,), bool),
-                        jnp.zeros((b,), jnp.int32), core)
+                        jnp.zeros((b,), jnp.int32),
+                        jnp.zeros((b, k), bool), core)
 
-            (out_toks, out_confs, keep, accept, esc, n_emit, core) = \
-                jax.lax.cond(tin["any_live"], verify, v_idle, core)
+            (out_toks, out_confs, keep, accept, esc, n_emit, match,
+             core) = jax.lax.cond(tin["any_live"], verify, v_idle, core)
             out.update({"toks": out_toks, "confs": out_confs, "keep": keep,
-                        "accept": accept, "esc": esc, "n_emit": n_emit})
+                        "accept": accept, "esc": esc, "n_emit": n_emit,
+                        # verify-lane ground truth for the gate audit: raw
+                        # per-position L accept/reject and the S draft confs
+                        # (out_confs overwrites the bonus position to 1.0,
+                        # which would poison calibration bins)
+                        "match": match, "draft_confs": confs.T})
             out_pool = {"core": core, "prefix": prefix} if sharing \
                 else {"core": core}
             return out, out_pool
@@ -781,6 +788,15 @@ class ContinuousScheduler:
         # telemetry collector (None = disabled: every hook site is a single
         # ``is None`` branch — the zero-overhead default)
         self.tel: Optional[Telemetry] = None
+        # decision-quality observability (serving/audit.py + flight_recorder
+        # .py) — same contract as telemetry: host-side, None by default,
+        # never part of the compile key
+        self.aud = None                      # GateAudit
+        self.wd = None                       # SLOWatchdog
+        self.fr = None                       # FlightRecorder
+        self._opens_seen = 0                 # breaker-open dump edge detect
+        self._run_theta = float(hi.theta)    # the run's CALIBRATED theta
+        self._eff_theta = float(hi.theta)    # theta IN EFFECT this tick
         # fault-injection state (host-side; set_faults replaces per run —
         # never part of the compile key, so changing it never recompiles)
         self.faults: FaultSchedule = NO_FAULTS
@@ -865,6 +881,28 @@ class ContinuousScheduler:
         self.tel = tel
         if tel is not None:
             tel.counters = self.counters
+            tel.audit = self.aud
+
+    def set_audit(self, aud) -> None:
+        """Install (``GateAudit``) or remove (``None``) the gate audit
+        stream.  Host-side only — the confidences it consumes already come
+        back in the tick's single ``_host_fetch``, so enabling it adds zero
+        syncs and never recompiles (``stream_compiles == 1`` holds)."""
+        self.aud = aud
+        if self.tel is not None:
+            self.tel.audit = aud
+
+    def set_watchdog(self, wd) -> None:
+        """Install (``SLOWatchdog``) or remove (``None``) the once-per-tick
+        SLO evaluation.  Breaches emit telemetry instant events and trigger
+        the flight recorder when those collectors are installed."""
+        self.wd = wd
+
+    def set_flight_recorder(self, fr) -> None:
+        """Install (``FlightRecorder``) or remove (``None``) the bounded
+        tick-snapshot ring.  Dumps fire on watchdog breach, breaker-open,
+        ``check_invariants`` failure, and the idle-tick stall bound."""
+        self.fr = fr
 
     def set_default_temperature(self, temperature: float) -> None:
         """Engine-level sampling temperature used for requests that don't set
@@ -927,6 +965,48 @@ class ContinuousScheduler:
             g["breaker_state"] = self._breaker.state_id
         return g
 
+    def _observe_tick(self, l_queue_len: int = 0) -> None:
+        """End-of-tick observability fan-out: telemetry gauges (audit
+        aggregates merged in — they become Chrome counter tracks), SLO
+        watchdog evaluation, flight-recorder snapshot + dump triggers.  All
+        host-side over state the tick already produced; with every collector
+        ``None`` this is one branch."""
+        tel, aud, wd, fr = self.tel, self.aud, self.wd, self.fr
+        if tel is None and wd is None and fr is None:
+            return
+        tick = self.counters.ticks - 1       # the tick just dispatched
+        gauges = self._gauges(l_queue_len)
+        if aud is not None:
+            gauges.update(aud.gauge_values())
+        if tel is not None:
+            tel.end_tick(gauges)
+        breaches = [] if wd is None else \
+            wd.evaluate(tick, tel=tel, audit=aud, gauges=gauges)
+        if tel is not None:
+            for b in breaches:
+                tel.instant(f"slo_breach:{b['kind']}", **b)
+        if fr is None:
+            return
+        # snapshot fields are deterministic functions of the request trace +
+        # fault schedule; serve_time is wall clock and would break the
+        # byte-identical dump guarantee
+        counters = {k: v for k, v in self.stats.items() if k != "serve_time"}
+        snap: Dict[str, Any] = {"tick": tick, "gauges": gauges,
+                                "counters": counters}
+        if fr.include_timings and tel is not None and tel.ticks:
+            snap["phase_seconds"] = {
+                p: round(t1 - t0, 9)
+                for p, t0, t1 in tel.ticks[-1].segments}
+        fr.record(snap)
+        for b in breaches:
+            fr.trigger(f"slo_breach:{b['kind']}", tick, b)
+        if self._breaker is not None \
+                and self._breaker.opens > self._opens_seen:
+            self._opens_seen = self._breaker.opens
+            fr.trigger("breaker_open", tick,
+                       {"opens": self._breaker.opens,
+                        "opened_tick": self._breaker.opened_tick})
+
     def run(self, queue: AdmissionQueue, *, theta: Optional[float] = None
             ) -> Dict[int, Dict[str, Any]]:
         """Drain ``queue`` through the slots; returns per-request records
@@ -959,6 +1039,8 @@ class ContinuousScheduler:
         theta_j = jnp.asarray(theta, jnp.float32)
         results: Dict[int, Dict[str, Any]] = {}
         tel = self.tel
+        self._run_theta = theta
+        self._eff_theta = theta
 
         if self.speculative:
             while len(queue) or self.srt.busy:
@@ -971,7 +1053,7 @@ class ContinuousScheduler:
                 self._absorb_spec(host, results)
                 if tel is not None:
                     tel.mark("postprocess")
-                    tel.end_tick(self._gauges())
+                self._observe_tick()
             return results
 
         # per-run fault state: run-relative tick 0 anchors here, so a seeded
@@ -982,6 +1064,7 @@ class ContinuousScheduler:
         self._breaker = CircuitBreaker(self.policy)
         self._esc_meta = {}
         self._probe = None
+        self._opens_seen = 0
         stall, idle = self._stall_limit(), 0
         l_queue: deque = deque()
         while (len(queue) or l_queue or self.srt.busy or self.lrt.busy
@@ -1026,23 +1109,35 @@ class ContinuousScheduler:
                 # trips on a genuinely unbounded schedule or policy.
                 idle += 1
                 if idle > stall:
+                    if self.fr is not None:
+                        self.fr.trigger("stall", cur, {
+                            "idle_ticks": idle, "queue": len(queue),
+                            "l_queue": len(l_queue),
+                            "in_flight": self._link.pending})
                     raise RuntimeError(
                         f"scheduler stalled: {idle} consecutive idle ticks "
                         f"with work pending (queue={len(queue)}, "
                         f"l_queue={len(l_queue)}, "
                         f"in_flight={self._link.pending})")
             open_now = self._breaker.state == CircuitBreaker.OPEN
+            self._eff_theta = FAIL_LOCAL_THETA if open_now else theta
             host = self._dispatch(theta_fail_j if open_now else theta_j)
             self._absorb(self.srt, host["s"],
                          lambda rec: self._finish_s(rec, theta, results))
             self._absorb(self.lrt, host["l"],
                          lambda rec: self._finish_l(rec, results))
             if self.validate:
-                self.srt.pool.check_invariants()
-                self.lrt.pool.check_invariants()
+                try:
+                    self.srt.pool.check_invariants()
+                    self.lrt.pool.check_invariants()
+                except AssertionError as e:
+                    if self.fr is not None:
+                        self.fr.trigger("invariant_failure", cur,
+                                        {"error": str(e)})
+                    raise
             if tel is not None:
                 tel.mark("postprocess")
-                tel.end_tick(self._gauges(len(l_queue)))
+            self._observe_tick(len(l_queue))
 
         self.counters.esc_lost += self._link.lost
         self.counters.breaker_opens += self._breaker.opens
@@ -1315,14 +1410,26 @@ class ContinuousScheduler:
                                    rt.slot_req[slot].adm.request.request_id,
                                    fed=keep, keep=int(rt.chunk_left[slot]))
             if fin and emit:
-                rt.slot_req[slot].emit(out["chunk_tok"][row],
-                                       out["chunk_conf"][row])
+                rec = rt.slot_req[slot]
+                if self.aud is not None and not rec.done:
+                    self.aud.decision(
+                        rid=rec.adm.request.request_id, tier=rt.name,
+                        tclass=rec.adm.request.tclass, kind="chunk",
+                        conf=float(out["chunk_conf"][row]),
+                        theta=self._eff_theta)
+                rec.emit(out["chunk_tok"][row], out["chunk_conf"][row])
 
     def _absorb(self, rt: _TierRuntime, out: Dict[str, np.ndarray],
                 finish) -> None:
+        aud = self.aud
         for row, slot in enumerate(rt.admitted):
-            rt.slot_req[slot].emit(out["admit_tok"][row],
-                                   out["admit_conf"][row])
+            rec = rt.slot_req[slot]
+            if aud is not None and not rec.done:
+                aud.decision(rid=rec.adm.request.request_id, tier=rt.name,
+                             tclass=rec.adm.request.tclass, kind="admit",
+                             conf=float(out["admit_conf"][row]),
+                             theta=self._eff_theta)
+            rec.emit(out["admit_tok"][row], out["admit_conf"][row])
         if self.chunk:
             self._absorb_chunk(rt, out, emit=True)
         k_steps = out["toks"].shape[0]
@@ -1333,6 +1440,13 @@ class ContinuousScheduler:
             if self.chunk and rt.chunk_left[slot] > 0:
                 continue               # still chunk-prefilling: no decode
             for k in range(k_steps):
+                if aud is not None and not rec.done:
+                    aud.decision(rid=rec.adm.request.request_id,
+                                 tier=rt.name,
+                                 tclass=rec.adm.request.tclass,
+                                 kind="decode",
+                                 conf=float(out["confs"][k][slot]),
+                                 theta=self._eff_theta)
                 rec.emit(out["toks"][k][slot], out["confs"][k][slot])
             rt.last_tok[slot] = int(out["toks"][k_steps - 1][slot])
             rt.tok_idx[slot] += k_steps
@@ -1378,6 +1492,24 @@ class ContinuousScheduler:
                 if esc:
                     self.tel.req_l_verify(slot, rid,
                                           int(l["accept"][slot]), n)
+            if self.aud is not None:
+                # verify-lane feedback: the block-level gate decision plus
+                # FREE per-position ground truth (L re-derived every drafted
+                # position greedily, escalated or not)
+                rid_a = rec.adm.request.request_id
+                tclass = rec.adm.request.tclass
+                dc = l["draft_confs"][slot]
+                mt = l["match"][slot]
+                self.aud.decision(rid=rid_a, tier="S", tclass=tclass,
+                                  kind="block", conf=float(dc[:k].min()),
+                                  theta=self._eff_theta, offload=esc)
+                for j in range(n):     # emitted positions (n <= k; the
+                    #                    rolled-back tail is re-drafted and
+                    #                    would double-count its positions)
+                    self.aud.outcome(rid=rid_a, tier="L", tclass=tclass,
+                                     conf=float(dc[j]),
+                                     theta=self._eff_theta,
+                                     ok=bool(mt[j]), kind="draft")
             for j in range(n):
                 rec.emit(l["toks"][slot][j], l["confs"][slot][j])
             last = int(l["toks"][slot][max(n - 1, 0)])
@@ -1402,6 +1534,13 @@ class ContinuousScheduler:
         conf = float(np.mean(np.asarray(rec.confs, np.float32)))
         rid = rec.adm.request.request_id
         self.counters.requests += 1
+        if self.aud is not None:
+            # the request-level escalation decision: REAL theta (intent
+            # semantics, matching ``offloaded`` — fail-local degradation is
+            # visible in ``status``, not a rewritten gate decision)
+            self.aud.decision(rid=rid, tier="S",
+                              tclass=rec.adm.request.tclass, kind="request",
+                              conf=conf, theta=theta)
         results[rid] = {
             "tokens": np.asarray(rec.tokens, np.int32),
             "s_tokens": np.asarray(rec.tokens, np.int32),
@@ -1440,6 +1579,16 @@ class ContinuousScheduler:
         out["tokens"] = np.asarray(rec.tokens, np.int32)
         out["served_remote"] = True
         out["status"] = "ok"
+        if self.aud is not None:
+            # plain-mode ground truth: one agreement sample per completed
+            # escalation — did the S answer match what L produced?
+            st, lt = out["s_tokens"], out["tokens"]
+            m = min(len(st), len(lt))
+            ok = m > 0 and bool(np.array_equal(st[:m], lt[:m]))
+            self.aud.outcome(rid=rid, tier="L",
+                             tclass=rec.adm.request.tclass,
+                             conf=out["confidence"], theta=self._run_theta,
+                             ok=ok, kind="l_agree")
         esc = self._esc_meta.pop(rid, None)
         if esc is not None:
             cur = self.counters.ticks - self._tick0
@@ -1459,6 +1608,13 @@ class ContinuousScheduler:
         escalated = sum(1 for esc, _ in rec.rounds if esc)
         if escalated:
             self.counters.offloaded += 1
+        if self.aud is not None:
+            self.aud.decision(
+                rid=rid, tier="S", tclass=rec.adm.request.tclass,
+                kind="request",
+                conf=float(np.mean(np.asarray(rec.confs, np.float32)))
+                if rec.confs else 1.0,
+                theta=self._run_theta, offload=escalated > 0)
         results[rid] = {
             "tokens": np.asarray(rec.tokens, np.int32),
             "s_tokens": np.asarray(rec.tokens, np.int32),

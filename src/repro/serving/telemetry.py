@@ -65,24 +65,67 @@ plus per-tick pool gauges sampled from host state the scheduler already
 holds: free pages, total refcounts, prefix-index size, COW copies, breaker
 state, L-queue depth, in-flight escalations, busy slots per tier.
 
+Decision-quality observability (``serving/audit.py``, PR 9)
+-----------------------------------------------------------
+The time-blind half of observability lives next door: ``GateAudit`` is the
+per-decision gate audit stream.  Each :class:`~repro.serving.audit.
+AuditRecord` carries ``(rid, tier, tclass, kind, conf, theta_in_effect,
+offload, ok)`` where ``kind`` is one of ``admit`` / ``chunk`` / ``decode``
+(per-token gate evaluations), ``block`` (speculative draft-block escalation
+decision), ``request`` (the request-level escalation decision), ``draft``
+(a verify-lane ground-truthed position, ``ok`` = L accepted the S token)
+or ``l_agree`` (completed escalation: S tokens matched L's).
+``theta_in_effect`` records the threshold the device ACTUALLY used —
+``FAIL_LOCAL_THETA`` while the circuit breaker is open.  Aggregates:
+streaming reliability bins (``core/calibrate.p_histogram`` bin semantics),
+running ECE + offload-rate per ``Request.tclass`` traffic class, a
+theta-margin histogram, and empirical-regret counters vs the verify-lane
+oracle.  When both collectors are installed the scheduler binds
+``telemetry.audit = audit`` so the ``hi_audit_*`` families ride
+:meth:`Telemetry.prometheus_text` and the audit gauges become Chrome-trace
+counter tracks.
+
+The SLO watchdog (:class:`~repro.serving.audit.SLOWatchdog`, configured by
+:class:`~repro.serving.audit.SLOThresholds`: ``ttft_p95`` / ``tpot_p95``
+seconds, ``queue_depth``, ``ece_max`` / ``offload_rate_max`` drift bounds
+with ``min_outcomes`` / ``min_requests`` warm-up floors) is evaluated once
+per tick; breaches append to ``watchdog.breaches``, emit
+:meth:`Telemetry.instant` events (Chrome ``i`` markers), and trigger the
+flight recorder (``serving/flight_recorder.py`` — a bounded ring of
+deterministic per-tick snapshots dumped as postmortem JSON on watchdog
+breach, breaker-open, ``check_invariants`` failure, or the idle-tick
+stall bound).
+
 Exporters
 ---------
 * :meth:`Telemetry.histogram_summary` — log-bucketed streaming histograms
   (TTFT / TPOT / queue-wait / escalation latency) with p50/p95/p99;
 * :meth:`Telemetry.prometheus_text` — a Prometheus text-format snapshot.
-  Keys: ``hi_<counter>_total`` one per :class:`SchedCounters` field
-  (e.g. ``hi_requests_total``, ``hi_degraded_local_total``),
+  Every family carries ``# HELP``/``# TYPE`` lines and label values are
+  escaped per the text exposition format.  Keys: ``hi_<counter>_total``
+  one per :class:`SchedCounters` field (e.g. ``hi_requests_total``,
+  ``hi_degraded_local_total``),
   ``hi_tick_phase_seconds_total{phase=...}`` per tick-phase bucket,
   ``hi_gauge{name=...,tier=...}`` last-sampled pool gauges, and per
   histogram ``hi_<name>_seconds`` a ``_count`` / ``_sum`` /
   ``_bucket{le=...}`` family (``hi_ttft_seconds``, ``hi_tpot_seconds``,
-  ``hi_queue_wait_ticks``, ``hi_esc_latency_seconds``);
+  ``hi_queue_wait_ticks``, ``hi_esc_latency_seconds``; the unbounded
+  overflow bucket folds into ``+Inf`` — no finite ``le`` edge).  With a
+  ``GateAudit`` bound, the audit families are appended:
+  ``hi_audit_decisions_total``, ``hi_audit_outcomes_total``,
+  ``hi_audit_regret_total{kind=...}``, ``hi_audit_regret_cost``,
+  ``hi_audit_ece{tclass=...}``, ``hi_audit_offload_rate{tclass=...}``,
+  ``hi_audit_reliability_total{bin=...,outcome=...}``, and
+  ``hi_audit_theta_margin`` (histogram);
 * ``serving/trace_export.py`` — Chrome ``trace_event`` JSON (one track per
-  slot per tier, escalations as S->L flow events), loadable in Perfetto.
+  slot per tier, escalations as S->L flow events, watchdog breaches as
+  instant markers, audit aggregates as counter tracks), loadable in
+  Perfetto.
 
 ``benchmarks/bench_serving.py --trace-out`` wires it to traffic and reports
 the overhead (budget: <2% req/s when enabled, 0 when disabled — gated in CI
-by ``--telemetry-smoke``).
+by ``--telemetry-smoke``; the audit stream has the same budget, gated by
+``--audit-smoke``).
 """
 from __future__ import annotations
 
@@ -97,6 +140,25 @@ PHASES = ("fault_tick", "build_operands", "dispatch", "host_fetch",
           "postprocess")
 
 _now = time.monotonic
+
+# one-line HELP strings for the prometheus_text metric families
+_HELP = {
+    "hi_tick_phase_seconds_total":
+        "Cumulative wall seconds per scheduler tick phase.",
+    "hi_gauge":
+        "Last-sampled per-tick pool/breaker/queue gauge (tier-labelled).",
+    "ttft": "Time to first token.",
+    "tpot": "Time per output token (after the first).",
+    "queue_wait": "Escalation queue wait.",
+    "esc_latency": "Escalation send-to-terminal latency.",
+}
+
+
+def escape_label(value: str) -> str:
+    """Escape a Prometheus label VALUE per the text exposition format
+    (backslash, double quote, newline)."""
+    return (str(value).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
 
 
 # ---------------------------------------------------------------------------
@@ -371,6 +433,12 @@ class Telemetry:
             "esc_latency": Histogram(1e-4, 100.0),
         }
         self.counters: Optional[SchedCounters] = None   # bound by scheduler
+        # GateAudit bound by the scheduler when both are installed — its
+        # hi_audit_* families ride prometheus_text; None = no audit lines
+        self.audit = None
+        # (t, name, args) instant events (SLO watchdog breaches) — rendered
+        # as Chrome ``i`` markers on the scheduler track by trace_export
+        self.events: List[Tuple[float, str, Dict[str, Any]]] = []
         self._tick: Optional[TickRecord] = None
         self._mark_t = 0.0
         # (rid, kind) -> open span awaiting its close
@@ -403,6 +471,11 @@ class Telemetry:
         tick.gauges = gauges
         self.ticks.append(tick)
         self._tick = None
+
+    def instant(self, name: str, **args: Any) -> None:
+        """Record a scheduler-level instant event (e.g. an SLO watchdog
+        breach) — exported as a Chrome ``i`` marker on the tick track."""
+        self.events.append((_now(), name, args))
 
     @property
     def tick_bracket(self) -> Tuple[float, float]:
@@ -553,34 +626,52 @@ class Telemetry:
 
     def prometheus_text(self) -> str:
         """Prometheus text-format snapshot (see module docstring for the
-        key schema)."""
+        key schema).  Every family carries ``# HELP`` + ``# TYPE`` lines,
+        label values are escaped per the text exposition format, and the
+        histograms' unbounded overflow bucket is folded into ``+Inf``
+        (finite ``le`` edges stop at the last bounded bucket)."""
         lines: List[str] = []
         if self.counters is not None:
             for f in fields(self.counters):
                 v = getattr(self.counters, f.name)
-                lines.append(f"# TYPE hi_{f.name}_total counter")
-                lines.append(f"hi_{f.name}_total {v}")
+                metric = f"hi_{f.name}_total"
+                lines.append(f"# HELP {metric} Cumulative scheduler "
+                             f"counter '{f.name}'.")
+                lines.append(f"# TYPE {metric} counter")
+                lines.append(f"{metric} {v}")
+        lines.append("# HELP hi_tick_phase_seconds_total "
+                     f"{_HELP['hi_tick_phase_seconds_total']}")
         lines.append("# TYPE hi_tick_phase_seconds_total counter")
         for p in PHASES:
-            lines.append(f'hi_tick_phase_seconds_total{{phase="{p}"}} '
-                         f"{self.phase_time.get(p, 0.0):.9f}")
+            lines.append(
+                f'hi_tick_phase_seconds_total{{phase="{escape_label(p)}"}} '
+                f"{self.phase_time.get(p, 0.0):.9f}")
         if self.ticks:
+            lines.append(f"# HELP hi_gauge {_HELP['hi_gauge']}")
             lines.append("# TYPE hi_gauge gauge")
             for k, v in sorted(self.ticks[-1].gauges.items()):
                 name, _, tier = k.partition("@")
-                tag = f',tier="{tier}"' if tier else ""
-                lines.append(f'hi_gauge{{name="{name}"{tag}}} {v}')
+                tag = f',tier="{escape_label(tier)}"' if tier else ""
+                lines.append(
+                    f'hi_gauge{{name="{escape_label(name)}"{tag}}} {v}')
         for name, h in self.hists.items():
             unit = h.unit
             metric = f"hi_{name}_{unit}"
+            lines.append(f"# HELP {metric} "
+                         f"{_HELP.get(name, f'{name} distribution.')}")
             lines.append(f"# TYPE {metric} histogram")
             cum = 0
+            # the last bucket is the unbounded overflow: it must NOT emit a
+            # finite ``le`` edge — its count reaches the +Inf line only
+            last = h.n_buckets - 1
             for i, c in enumerate(h.counts):
                 cum += c
-                if c:
+                if c and i < last:
                     edge = h.upper_edge(i)
                     lines.append(f'{metric}_bucket{{le="{edge:g}"}} {cum}')
             lines.append(f'{metric}_bucket{{le="+Inf"}} {h.count}')
             lines.append(f"{metric}_sum {h.total:.9f}")
             lines.append(f"{metric}_count {h.count}")
+        if self.audit is not None:
+            lines.extend(self.audit.prometheus_lines())
         return "\n".join(lines) + "\n"

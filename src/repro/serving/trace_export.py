@@ -18,7 +18,12 @@ Trace Event Format consumed by Perfetto (https://ui.perfetto.dev) and
   the L-side ``l_verify`` start, ``id`` = request id) so Perfetto renders
   an S->L arrow per escalation attempt;
 * terminal statuses appear as ``i`` (instant) markers named
-  ``terminal:<status>``.
+  ``terminal:<status>``;
+* watchdog/audit events recorded via :meth:`Telemetry.instant` (e.g.
+  ``slo_breach:<kind>``) render as global ``i`` markers on pid 0 under
+  ``cat: "slo"``; when a :class:`~repro.serving.audit.GateAudit` is
+  installed its per-tick aggregates (running ECE, offload rate, regret
+  cost) arrive through the tick gauges and so become counter tracks.
 
 Timestamps are microseconds relative to the collector's earliest event, so
 traces start at t=0 regardless of the host's monotonic epoch.
@@ -41,6 +46,8 @@ def _epoch(tel) -> float:
     for tr in tel.traces.values():
         for s in tr.spans:
             t0 = min(t0, s.t0)
+    for t, _name, _args in getattr(tel, "events", ()):
+        t0 = min(t0, t)
     return 0.0 if math.isinf(t0) else t0
 
 
@@ -77,6 +84,11 @@ def chrome_trace(tel) -> Dict[str, Any]:
         for k, v in tick.gauges.items():
             ev.append({"ph": "C", "pid": 0, "name": k, "ts": us(tick.t0),
                        "args": {"value": v}})
+
+    # -- watchdog / audit instant events ------------------------------------
+    for t, name, args in getattr(tel, "events", ()):
+        ev.append({"ph": "i", "pid": 0, "tid": 0, "s": "g", "name": name,
+                   "cat": "slo", "ts": us(t), "args": dict(args)})
 
     # -- request spans ------------------------------------------------------
     for rid in sorted(tel.traces):

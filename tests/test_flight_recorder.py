@@ -1,0 +1,169 @@
+"""Flight-recorder invariants (PR 9).
+
+* the snapshot ring stays bounded under long runs (capacity = maxlen);
+* a seeded ``FaultSchedule`` outage produces a breaker-open dump that is
+  BYTE-identical across two fresh engines (determinism: snapshots exclude
+  wall clock) and contains the breaker-open tick;
+* the dump-on-invariant-failure path fires and re-raises;
+* the stall path dumps before its RuntimeError;
+* unit behavior: capacity validation, ``path`` persistence, canonical JSON.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs.base import HIConfig
+from repro.configs.registry import ARCHS
+from repro.serving.batcher import Request
+from repro.serving.engine import build_engine
+from repro.serving.faults import FaultSchedule, RetryPolicy
+from repro.serving.flight_recorder import FlightRecorder
+
+STEPS = 3
+KW = dict(buckets=(8,), num_slots=2, page_size=8)
+
+
+def _reqs(cfg, n):
+    rng = np.random.default_rng(0)
+    return [Request(i, rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                    max_new_tokens=STEPS) for i in range(n)]
+
+
+def _outage_engine():
+    cfg = ARCHS["qwen2-1.5b"].reduced()
+    # theta 1.1 > any confidence: every request wants escalation, so the
+    # outage window reliably trips the breaker
+    return cfg, build_engine(cfg, HIConfig(theta=1.1, capacity_factor=1.0),
+                             max_new_tokens=STEPS, cache_len=32)
+
+
+def _outage_run(fr):
+    cfg, eng = _outage_engine()
+    eng.serve_stream(
+        _reqs(cfg, 8), validate=True,
+        faults=FaultSchedule(seed=5, outages=((1, 4),)),
+        retry=RetryPolicy(ack_timeout_ticks=1, max_retries=1,
+                          breaker_threshold=2, breaker_cooldown_ticks=2),
+        flight_recorder=fr, **KW)
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# unit behavior
+# ---------------------------------------------------------------------------
+
+def test_ring_bounded_and_capacity_validated():
+    with pytest.raises(ValueError, match="capacity"):
+        FlightRecorder(capacity=0)
+    fr = FlightRecorder(capacity=4)
+    for i in range(100):
+        fr.record({"tick": i})
+    assert len(fr.ring) == 4
+    assert [s["tick"] for s in fr.ring] == [96, 97, 98, 99]
+    dump = fr.trigger("test", 99)
+    assert len(dump["ring"]) == 4 and dump["seq"] == 0
+    assert fr.last_dump is dump
+
+
+def test_path_persistence_and_canonical_json(tmp_path):
+    p = tmp_path / "dump.json"
+    fr = FlightRecorder(capacity=2, path=str(p))
+    fr.record({"tick": 0, "b": 1.0, "a": 2})
+    d1 = fr.trigger("first", 0)
+    fr.record({"tick": 1})
+    d2 = fr.trigger("second", 1, {"why": "because"})
+    # last trigger wins the file; both dumps are kept in memory
+    assert json.loads(p.read_text())["reason"] == "second"
+    assert [d["seq"] for d in fr.dumps] == [0, 1]
+    assert d2["detail"] == {"why": "because"}
+    # canonical serialization: equal content -> equal bytes
+    assert FlightRecorder.dump_json(d1) == \
+        FlightRecorder.dump_json(json.loads(FlightRecorder.dump_json(d1)))
+
+
+# ---------------------------------------------------------------------------
+# ring bounded on a real run
+# ---------------------------------------------------------------------------
+
+def test_ring_bounded_under_long_run():
+    cfg = ARCHS["qwen2-1.5b"].reduced()
+    eng = build_engine(cfg, HIConfig(theta=0.6, capacity_factor=1.0),
+                       max_new_tokens=STEPS, cache_len=32)
+    fr = FlightRecorder(capacity=4)
+    eng.serve_stream(_reqs(cfg, 10), validate=True, flight_recorder=fr,
+                     **KW)
+    ticks = eng.stats["stream_ticks"]
+    assert ticks > 4, "the run must outlive the ring"
+    assert len(fr.ring) == 4
+    assert [s["tick"] for s in fr.ring] == \
+        list(range(ticks - 4, ticks)), "the ring keeps the LAST 4 ticks"
+    assert not fr.dumps, "a healthy run triggers nothing"
+
+
+# ---------------------------------------------------------------------------
+# breaker-open dump: deterministic and carries the open tick
+# ---------------------------------------------------------------------------
+
+def test_breaker_open_dump_deterministic_across_runs():
+    fr1, fr2 = FlightRecorder(capacity=8), FlightRecorder(capacity=8)
+    eng1 = _outage_run(fr1)
+    _outage_run(fr2)
+    assert eng1.stats["breaker_opens"] >= 1
+    opens = [d for d in fr1.dumps if d["reason"] == "breaker_open"]
+    assert opens, "the outage must produce a breaker-open dump"
+    dump = opens[0]
+    # the dump names the tick the breaker opened on, and the frozen ring
+    # actually covers it (snapshot gauges flip to breaker_state == OPEN)
+    assert dump["detail"]["opens"] == 1
+    assert dump["detail"]["opened_tick"] >= 0
+    assert any(s["gauges"].get("breaker_state") == 1.0
+               for s in dump["ring"]), "ring must show the OPEN transition"
+    assert all("serve_time" not in s["counters"] for s in dump["ring"])
+    # byte-identical across two fresh engines on the same seeded schedule
+    j1 = [FlightRecorder.dump_json(d) for d in fr1.dumps]
+    j2 = [FlightRecorder.dump_json(d) for d in fr2.dumps]
+    assert j1 == j2
+
+
+# ---------------------------------------------------------------------------
+# invariant-failure and stall postmortems
+# ---------------------------------------------------------------------------
+
+def test_invariant_failure_dumps_and_reraises(monkeypatch):
+    cfg = ARCHS["qwen2-1.5b"].reduced()
+    eng = build_engine(cfg, HIConfig(theta=0.6, capacity_factor=1.0),
+                       max_new_tokens=STEPS, cache_len=32)
+    fr = FlightRecorder(capacity=4)
+    # prime the scheduler, then poison check_invariants on a later run
+    eng.serve_stream(_reqs(cfg, 2), validate=True, flight_recorder=fr, **KW)
+    sched = eng._stream[1]
+
+    def boom():
+        raise AssertionError("injected invariant violation")
+
+    monkeypatch.setattr(sched.srt.pool, "check_invariants", boom)
+    with pytest.raises(AssertionError, match="injected invariant"):
+        eng.serve_stream(_reqs(cfg, 2), validate=True, flight_recorder=fr,
+                         **KW)
+    assert fr.last_dump["reason"] == "invariant_failure"
+    assert "injected invariant" in fr.last_dump["detail"]["error"]
+
+
+def test_stall_dumps_before_runtime_error(monkeypatch):
+    cfg = ARCHS["qwen2-1.5b"].reduced()
+    eng = build_engine(cfg, HIConfig(theta=1.1, capacity_factor=1.0),
+                       max_new_tokens=STEPS, cache_len=32)
+    fr = FlightRecorder(capacity=4)
+    # prime the scheduler, then force the idle-tick bound to zero: a delayed
+    # escalation's in-transit timer ticks become a "stall" immediately
+    eng.serve_stream(_reqs(cfg, 1), flight_recorder=fr, **KW)
+    sched = eng._stream[1]
+    monkeypatch.setattr(sched, "_stall_limit", lambda: 0)
+    with pytest.raises(RuntimeError, match="stalled"):
+        eng.serve_stream(_reqs(cfg, 1),
+                         faults=FaultSchedule(seed=1, delay_ticks=6),
+                         flight_recorder=fr, **KW)
+    assert fr.last_dump["reason"] == "stall"
+    assert fr.last_dump["detail"]["idle_ticks"] > 0
+    assert fr.last_dump["detail"]["in_flight"] >= 1
