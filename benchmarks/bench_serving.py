@@ -90,6 +90,19 @@ with S→L flow arrows — loadable in chrome://tracing or Perfetto.
   PYTHONPATH=src python -m benchmarks.bench_serving --audit-smoke
                     # gate: decision-audit stream token-identical, bins ==
                     # p_histogram oracle, <2% overhead, ECE reported
+  PYTHONPATH=src python -m benchmarks.bench_serving --mesh-smoke
+                    # gate: data=4 S replicas >= 1.5x single-device req/s,
+                    # nonzero transfer_overlap tick phase, 1 compiled shape
+
+The MESH scenario measures the data-parallel tier split (scheduler
+``mesh=``): R=4 S replicas shard_map'd over the ``data`` axis, each owning
+a disjoint slot slice + its own paged-pool shard, escalations staged
+through the double-buffered device transfer written at tick top.  It runs
+in a subprocess with forced host devices (theta=0, the S-resident regime —
+on a CI host the mesh "devices" share one core, so the L tier's GSPMD
+replication would measure the host, not the design) and reports req/s vs
+the single-device scheduler, tick counts, and the per-tick phase buckets
+including ``transfer_overlap``.
 
 Full runs append a compact per-run ``history`` entry (git rev, date, req/s
 per scenario) into the output JSON instead of clobbering the trajectory —
@@ -99,8 +112,10 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import subprocess
+import sys
 import time
 
 import jax
@@ -900,6 +915,128 @@ def _calibrate_theta(eng, reqs, quantile: float = 0.25) -> float:
     return float(np.quantile(np.asarray(confs), quantile))
 
 
+# -- mesh-sharded tier-split serving -----------------------------------------
+# the data-parallel S-replica bench runs in a subprocess with forced host
+# devices (XLA_FLAGS must be set before jax import, so the parent — already
+# holding an initialized single-device jax — re-execs this module)
+MESH_DATA = 4                  # S replicas on the `data` axis
+MESH_SLOTS = 4                 # decode slots per replica
+MESH_STEPS = 8
+MESH_REQUESTS = 48
+
+
+def _mesh_worker(smoke: bool) -> dict:
+    """Runs INSIDE the forced-multi-device subprocess (``--mesh-worker``):
+    time the mesh-sharded scheduler (``serve_stream(mesh=...)``, data=4) vs
+    the single-device scheduler on the same host, same workload.
+
+    The workload is theta=0 (every request finishes on its S replica): on a
+    CI host whose "devices" are forced slices of ONE core, the GSPMD
+    replication of the L tier across mesh devices serializes and would
+    measure the host, not the design — the S-resident regime is the paper's
+    common case and is where data parallelism pays.  The escalation staging
+    path still runs every tick (the double-buffer copy + shard_map lanes are
+    structural), so the ``transfer_overlap`` phase bucket is reported from
+    the same run."""
+    from repro.launch.mesh import make_serving_mesh
+
+    assert len(jax.devices()) >= MESH_DATA, \
+        f"worker needs >= {MESH_DATA} devices, got {len(jax.devices())}"
+    cfg = ARCHS[ARCH].reduced()
+    iters = 2 if smoke else 3
+    kw = dict(buckets=(16,), num_slots=MESH_SLOTS, page_size=PAGE_SIZE)
+    hi = HIConfig(theta=0.0, capacity_factor=1.0)
+
+    def reqs():
+        rng = np.random.default_rng(0)
+        return [Request(i, rng.integers(0, cfg.vocab_size, 12)
+                        .astype(np.int32), max_new_tokens=MESH_STEPS)
+                for i in range(MESH_REQUESTS)]
+
+    def measure(mesh):
+        eng = build_engine(cfg, hi, max_new_tokens=MESH_STEPS, cache_len=64)
+        eng.serve_stream(reqs(), mesh=mesh, **kw)       # compile + warm
+        best, ticks, tel = float("inf"), 0, None
+        for _ in range(iters):
+            t = Telemetry()
+            tick0 = eng.stats["stream_ticks"]   # counter is cumulative
+            t0 = time.perf_counter()
+            eng.serve_stream(reqs(), mesh=mesh, telemetry=t, **kw)
+            dt = time.perf_counter() - t0
+            if dt < best:
+                best = dt
+                ticks = eng.stats["stream_ticks"] - tick0
+                tel = t
+        assert eng.stats["stream_compiles"] == 1
+        return best, int(ticks), tel
+
+    t_base, ticks_base, _ = measure(None)
+    t_mesh, ticks_mesh, tel = measure(make_serving_mesh(MESH_DATA, 1))
+    phase_ms = {}
+    for tick in tel.ticks:
+        for phase, t0, t1 in tick.segments:
+            phase_ms[phase] = phase_ms.get(phase, 0.0) + (t1 - t0) * 1e3
+    return {
+        "mesh_shape": {"data": MESH_DATA, "model": 1},
+        "requests": MESH_REQUESTS,
+        "max_new_tokens": MESH_STEPS,
+        "slots_per_replica": MESH_SLOTS,
+        "theta": 0.0,
+        "single_rps": MESH_REQUESTS / t_base,
+        "mesh_rps": MESH_REQUESTS / t_mesh,
+        "mesh_speedup": t_base / t_mesh,
+        "single_ticks": ticks_base,
+        "mesh_ticks": ticks_mesh,
+        "phase_ms_per_tick": {k: v / max(ticks_mesh, 1)
+                              for k, v in phase_ms.items()},
+        "stream_compiled_shapes": 1,
+    }
+
+
+def _bench_mesh(smoke: bool) -> dict:
+    """Parent-side driver: re-exec this module with forced host devices and
+    ``--mesh-worker``, parse the marker line it prints."""
+    root = pathlib.Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count="
+                        f"{MESH_DATA}").strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (str(root / "src"), str(root),
+                    env.get("PYTHONPATH", "")) if p)
+    cmd = [sys.executable, "-m", "benchmarks.bench_serving", "--mesh-worker"]
+    if smoke:
+        cmd.append("--smoke")
+    out = subprocess.run(cmd, env=env, cwd=str(root), capture_output=True,
+                         text=True, timeout=1200)
+    for line in out.stdout.splitlines():
+        if line.startswith("MESH_BENCH_JSON:"):
+            return json.loads(line[len("MESH_BENCH_JSON:"):])
+    raise RuntimeError("mesh bench worker produced no result:\n"
+                       + out.stdout[-2000:] + out.stderr[-2000:])
+
+
+def run_mesh_smoke() -> dict:
+    """CI mesh gate (``--mesh-smoke``): the data-parallel mesh path must
+    (1) serve >= 1.5x the single-device req/s at data=4 on the S-resident
+    workload, (2) spend measurable wall time in the ``transfer_overlap``
+    phase (the escalation staging copy is issued at tick top, overlapping
+    S-side compute), and (3) keep ONE compiled stream executable.  Exits
+    nonzero (via AssertionError) on any violation."""
+    r = _bench_mesh(smoke=True)
+    assert r["mesh_speedup"] >= 1.5, \
+        f"mesh speedup {r['mesh_speedup']:.2f}x < 1.5x at data={MESH_DATA}"
+    overlap = r["phase_ms_per_tick"].get("transfer_overlap", 0.0)
+    assert overlap > 0.0, "transfer_overlap phase absent from tick buckets"
+    assert r["stream_compiled_shapes"] == 1
+    emit("serving_mesh_smoke", 0.0,
+         f"mesh gate PASS: {r['mesh_rps']:.1f} req/s at data={MESH_DATA} vs "
+         f"{r['single_rps']:.1f} single-device ({r['mesh_speedup']:.2f}x >= "
+         f"1.5x), ticks {r['single_ticks']} -> {r['mesh_ticks']}, "
+         f"transfer_overlap {overlap:.3f}ms/tick, 1 compiled shape")
+    return r
+
+
 def _prefill_decode_split(cfg, bucket: int, iters: int = 10):
     """Per-batch prefill vs decode milliseconds for the batched path."""
     params = model_zoo.init_params(jax.random.PRNGKey(0), cfg)
@@ -993,6 +1130,9 @@ def run(out_path: str = "BENCH_serving.json", smoke: bool = False,
     telemetry = _bench_telemetry(cfg, reqs, theta, iters, decode_block,
                                  trace_out=trace_out)
 
+    # -- mesh-sharded tier split: data=4 S replicas vs single device --------
+    mesh = _bench_mesh(smoke)
+
     result = {
         "arch": ARCH,
         "requests": REQUESTS,
@@ -1030,6 +1170,7 @@ def run(out_path: str = "BENCH_serving.json", smoke: bool = False,
         "outage": outage,
         "kv_quant": kv_quant,
         "telemetry": telemetry,
+        "mesh": mesh,
         "smoke": smoke,
         "backend": jax.default_backend(),
     }
@@ -1066,6 +1207,7 @@ def run(out_path: str = "BENCH_serving.json", smoke: bool = False,
             "speculative": speculative["speculative_rps"],
             "outage": outage["outage_rps"],
             "kv_int8": kv_quant["int8_rps"],
+            "mesh": mesh["mesh_rps"],
         },
     })
     result["history"] = history
@@ -1130,6 +1272,13 @@ def run(out_path: str = "BENCH_serving.json", smoke: bool = False,
          f"{tm['disabled_rps']:.1f} off ({tm['overhead_frac']:.2%} "
          f"overhead), {tm['trace_events']} trace events"
          + (f" -> {tm['trace_out']}" if tm["trace_out"] else ""))
+    ms = mesh
+    emit("serving_mesh", 0.0,
+         f"{ms['mesh_rps']:.1f} req/s at data={ms['mesh_shape']['data']} vs "
+         f"{ms['single_rps']:.1f} single-device ({ms['mesh_speedup']:.2f}x), "
+         f"ticks {ms['single_ticks']} -> {ms['mesh_ticks']}, "
+         f"transfer_overlap "
+         f"{ms['phase_ms_per_tick'].get('transfer_overlap', 0.0):.3f}ms/tick")
     return result
 
 
@@ -1161,10 +1310,21 @@ def main():
                          "the same slot/page config, >= 99%% teacher-forced "
                          "greedy top-1 agreement, one compiled shape and "
                          "clean pool invariants in both dtypes")
+    ap.add_argument("--mesh-smoke", action="store_true",
+                    help="mesh gate: data=4 S replicas serve >= 1.5x the "
+                         "single-device req/s on the S-resident workload, "
+                         "the transfer_overlap tick phase is nonzero, one "
+                         "compiled shape (runs a forced-multi-device "
+                         "subprocess)")
+    ap.add_argument("--mesh-worker", action="store_true",
+                    help=argparse.SUPPRESS)
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write the instrumented pass's Chrome trace_event "
                          "JSON here (load in chrome://tracing or Perfetto)")
     args = ap.parse_args()
+    if args.mesh_worker:
+        print("MESH_BENCH_JSON:" + json.dumps(_mesh_worker(args.smoke)))
+        return
     if args.chaos_smoke:
         r = run_chaos_smoke(dump_out=args.dump_out)
     elif args.quant_smoke:
@@ -1173,6 +1333,8 @@ def main():
         r = run_telemetry_smoke(trace_out=args.trace_out)
     elif args.audit_smoke:
         r = run_audit_smoke(trace_out=args.trace_out)
+    elif args.mesh_smoke:
+        r = run_mesh_smoke()
     else:
         r = run(args.out, smoke=args.smoke, trace_out=args.trace_out)
     print(json.dumps(r, indent=2))

@@ -35,6 +35,19 @@ exactly the unquantized graph, so bf16 pools stay bitwise identical.
 Write-side quantization (monotone per-page running-max scales) lives in
 ``models/layers.py``; the scale rows move with their pages under COW via
 ``copy_pages_pallas``, which is shape/dtype-generic over the pool operand.
+
+Mesh-sharded serving (``scheduler.ContinuousScheduler(mesh=...)``)
+------------------------------------------------------------------
+Under ``shard_map`` over the ``data`` axis (the S tier's replica fan-out),
+every kernel here sees PER-SHARD local shapes: B is the replica's slot
+count, P the replica's own page pool, and the block table is replica-local
+— nothing in the grid or the BlockSpecs changes, so the kernels compose
+with the sharded tick for any ``data`` size.  The ``model`` axis is
+different: GSPMD cannot partition a ``pallas_call`` body, so an L tier with
+``model > 1`` must run the reference (non-kernel) gather — the scheduler
+rejects ``use_kernel`` + ``model > 1`` up front, and ``_check_heads`` below
+catches the symptom (a locally-narrower K pool meeting an unsharded q)
+with a diagnosis instead of a silently wrong ``h // kh`` group size.
 """
 from __future__ import annotations
 
@@ -54,6 +67,20 @@ _NEG = -1e30
 # allocation time — a clear host-side error instead of a Pallas lowering
 # failure deep inside the tick executable.
 MAX_PREFETCH_PAGES = 2048
+
+
+def _check_heads(h: int, kh: int) -> int:
+    """GQA group size, with a mesh-aware diagnosis: a pool whose K dim was
+    narrowed by a ``model``-axis partition while q kept all H heads shows up
+    here as a non-dividing head count — fail loudly before the kernel
+    computes with a wrong group size."""
+    if h % kh:
+        raise ValueError(
+            f"query heads H={h} not divisible by pool kv heads K={kh}; if "
+            "the page pool is model-axis sharded (mesh serving), the Pallas "
+            "gather cannot be GSPMD-partitioned — run the L tier with "
+            "use_kernel=False (the scheduler enforces this)")
+    return h // kh
 
 
 def _flash_update(q, k, v, valid, acc_ref, m_ref, l_ref, *, scale: float,
@@ -102,7 +129,7 @@ def decode_attention_pallas(q: jnp.ndarray, cache_k: jnp.ndarray,
     Returns (B, 1, H, D) attention output (fp32 accumulation)."""
     b, _, h, d = q.shape
     s, kh = cache_k.shape[1], cache_k.shape[2]
-    g = h // kh
+    g = _check_heads(h, kh)
     qg = q.reshape(b, kh, g, d)
     # largest divisor of S not exceeding the requested tile; block_s == s
     # simply yields a single-step grid (nsb == 1)
@@ -298,7 +325,7 @@ def decode_attention_chunk_paged_pallas(q: jnp.ndarray, pool_k: jnp.ndarray,
     b, c, h, d = q.shape
     page, kh = pool_k.shape[1], pool_k.shape[2]
     npg = block.shape[1]
-    g = h // kh
+    g = _check_heads(h, kh)
     qg = q.reshape(b, c, kh, g, d).transpose(0, 2, 1, 3, 4)  # (B, KH, C, G, D)
     mask = valid.astype(jnp.int32).reshape(b, c, npg, page)
     quant = scale_k is not None
@@ -362,7 +389,7 @@ def decode_attention_paged_pallas(q: jnp.ndarray, pool_k: jnp.ndarray,
     b, _, h, d = q.shape
     page, kh = pool_k.shape[1], pool_k.shape[2]
     npg = block.shape[1]
-    g = h // kh
+    g = _check_heads(h, kh)
     qg = q.reshape(b, kh, g, d)
     mask = valid.astype(jnp.int32).reshape(b, npg, page)
     quant = scale_k is not None

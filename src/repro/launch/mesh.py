@@ -29,5 +29,27 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 def make_debug_mesh(data: int = 1, model: int = 1) -> Mesh:
     """Tiny mesh over however many real devices exist (tests)."""
+    return make_serving_mesh(data, model)
+
+
+def make_serving_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """(data, model) mesh for the mesh-sharded serving scheduler.
+
+    ``data`` is the S-tier replica count (each replica owns a disjoint slot
+    slice + its own paged-pool shard); ``model`` is the L tier's tensor-
+    parallel axis.  A (1, 1) mesh is the DEBUG configuration: the sharded
+    tick runs on one device and must be token-identical to the unsharded
+    path.  Validates the device count up front — ``jax.make_mesh`` with too
+    few devices fails with an opaque reshape error.
+    """
+    need = data * model
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"serving mesh ({data}, {model}) needs {need} devices, have "
+            f"{len(devices)}; on CPU force host devices with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N before the "
+            "first jax import (tests/conftest.py does this under "
+            "REPRO_MULTI_DEVICE=1)")
     return jax.make_mesh((data, model), ("data", "model"),
-                         devices=jax.devices()[: data * model])
+                         devices=devices[:need])

@@ -13,10 +13,12 @@ router glues them, exactly like the HIEngine does on CPU.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
-from typing import Any, Dict
+from typing import Any, Dict, Optional, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
@@ -26,14 +28,26 @@ from repro.models import model_zoo
 from repro.sharding import specs as sh
 
 
-def make_tier_meshes():
-    """Two disjoint 16x16 meshes from the 512 forced host devices."""
+def make_tier_meshes(shape: Optional[Tuple[int, int]] = None
+                     ) -> Tuple[Mesh, Mesh]:
+    """Two disjoint (data, model) meshes of ``shape`` each, split from the
+    front of ``jax.devices()`` — S tier first, L tier second.
+
+    ``shape=None`` keeps the historical default: two 16x16 pods from the
+    512-device dry-run env.  Any smaller shape (e.g. ``(2, 2)`` on an
+    8-forced-device CPU host) splits whatever devices exist, so the split is
+    exercisable in plain-CPU tests without the dry-run harness.
+    """
+    shape = (16, 16) if shape is None else tuple(shape)
+    per = shape[0] * shape[1]
     devs = jax.devices()
-    if len(devs) < 512:
-        raise RuntimeError("tier split needs the 512-device dry-run env")
-    import numpy as np
-    s_devs = np.asarray(devs[:256]).reshape(16, 16)
-    l_devs = np.asarray(devs[256:512]).reshape(16, 16)
+    if len(devs) < 2 * per:
+        raise RuntimeError(
+            f"tier split needs {2 * per} devices for two {shape} meshes, "
+            f"have {len(devs)} (the 512-device dry-run env provides the "
+            f"default 2x(16,16))")
+    s_devs = np.asarray(devs[:per]).reshape(shape)
+    l_devs = np.asarray(devs[per:2 * per]).reshape(shape)
     return (Mesh(s_devs, ("data", "model")), Mesh(l_devs, ("data", "model")))
 
 
@@ -63,9 +77,9 @@ def lower_tier_split(cfg: ModelConfig, shape: ShapeConfig, *,
         token = jax.ShapeDtypeStruct((batch, 1), "int32")
         fsdp = case_specs.serving_fsdp(mcfg, mesh)
         p_sh = sh.param_shardings(params, mesh, fsdp=fsdp)
-        import dataclasses as _dc
         c_specs = sh.cache_specs(mcfg, mesh,
-                                 _dc.replace(shape, global_batch=batch))
+                                 dataclasses.replace(shape,
+                                                     global_batch=batch))
         c_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs)
         t_sh = NamedSharding(mesh, P("data" if batch % 16 == 0 else None,
                                      None))

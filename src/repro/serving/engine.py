@@ -424,9 +424,9 @@ class HIEngine:
                      prefix_sharing: bool = True, prefix_entries: int = None,
                      chunk_prefill: bool = False, chunk_size: int = 8,
                      chunk_width: int = 2, speculative: bool = False,
-                     kv_dtype: str = "bf16", faults=None, retry=None,
-                     validate: bool = False, telemetry=None, audit=None,
-                     watchdog=None,
+                     kv_dtype: str = "bf16", mesh=None, faults=None,
+                     retry=None, validate: bool = False, telemetry=None,
+                     audit=None, watchdog=None,
                      flight_recorder=None) -> Dict[int, Dict[str, np.ndarray]]:
         """Continuous-batching entry point: serve ``requests`` (an iterable of
         ``batcher.Request``) through slot-level admission over the paged KV
@@ -476,6 +476,20 @@ class HIEngine:
         KV bytes per slot at a small greedy-fidelity cost (tolerance-based
         rather than bitwise equivalence).  Still one executable and one
         host sync per tick in either mode.
+
+        ``mesh`` (a jax ``Mesh`` with axes ``("data", "model")``, e.g. from
+        ``launch.mesh.make_serving_mesh``) turns on mesh-sharded tier-split
+        serving: the S tier becomes ``data`` data-parallel replicas (each
+        owning its own slot slice + paged-pool shard, run under
+        ``shard_map``), the L tier's params and KV pages shard over
+        ``model``, and S→L escalation tokens route through a donated
+        double-buffered device staging buffer dispatched at tick top so the
+        transfer overlaps the same tick's S-side compute (the modelled DCN
+        hop costs one tick of L-admission latency, never critical-path
+        time).  Still ONE compiled executable and ONE host fetch per tick
+        per host; at a (1, 1) debug mesh greedy outputs are token-identical
+        to ``mesh=None``.  The mesh participates in the scheduler cache key
+        by identity.
 
         Failure semantics: ``faults`` (a ``serving.faults.FaultSchedule``)
         injects deterministic, seeded ED↔ES transport faults — escalation
@@ -538,9 +552,12 @@ class HIEngine:
                     "speculative serving is greedy-only: requests "
                     f"{hot} set temperature > 0, which requires rejection "
                     "sampling (future work)")
+        mesh_key = None if mesh is None else (tuple(sorted(mesh.shape.items())),
+                                              id(mesh))
         key = (tuple(sorted(buckets)), num_slots, l_slots, page_size,
                admit_width, decode_block, prefix_sharing, prefix_entries,
-               chunk_prefill, chunk_size, chunk_width, speculative, kv_dtype)
+               chunk_prefill, chunk_size, chunk_width, speculative, kv_dtype,
+               mesh_key)
         if self._stream is None or self._stream[0] != key:
             sched = ContinuousScheduler(
                 self.s, self.l, self.hi, max_prompt_len=max(buckets),
@@ -552,7 +569,7 @@ class HIEngine:
                 prefix_entries=prefix_entries,
                 chunk_prefill=chunk_prefill, chunk_size=chunk_size,
                 chunk_width=chunk_width, speculative=speculative,
-                kv_dtype=kv_dtype)
+                kv_dtype=kv_dtype, mesh=mesh)
             self._stream = (key, sched)
             self.stats["stream_compiles"] += sched.stats["compiles"]
         sched = self._stream[1]

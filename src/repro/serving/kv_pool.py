@@ -77,6 +77,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -136,7 +137,8 @@ class KVPool:
 
     def __init__(self, cfg: ModelConfig, num_slots: int, max_context: int,
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 dtype=jnp.bfloat16, prefix_entries: int = 0):
+                 dtype=jnp.bfloat16, prefix_entries: int = 0,
+                 alloc: bool = True):
         if max_context % page_size:
             raise ValueError(f"max_context {max_context} must be a multiple "
                              f"of page_size {page_size}")
@@ -165,8 +167,21 @@ class KVPool:
         if num_pages < 2:
             raise ValueError("need at least one non-null page")
         self.num_pages = num_pages
-        self.buffers = model_zoo.init_paged_cache(cfg, num_slots, num_pages,
-                                                  page_size, dtype)
+        # ``alloc=False`` (mesh-sharded serving): this pool is one REPLICA's
+        # host-side allocator — free list, block table, refcounts, prefix
+        # index — while the device allocation lives in the scheduler's ONE
+        # stacked, data-sharded, donated pool tree.  The buffers here are
+        # ShapeDtypeStructs (shape/dtype only), which every consumer that
+        # stays host-side (gauges, kv_bytes_total, check_invariants) already
+        # tolerates: they only read ``.shape`` / ``.dtype``.
+        self._alloc = bool(alloc)
+        if alloc:
+            self.buffers = model_zoo.init_paged_cache(
+                cfg, num_slots, num_pages, page_size, dtype)
+        else:
+            self.buffers = jax.eval_shape(
+                lambda: model_zoo.init_paged_cache(cfg, num_slots, num_pages,
+                                                   page_size, dtype))
         self.kv_dtype = str(jnp.dtype(dtype))
         # byte accounting over the donated pool allocation (pages + scale
         # rows + recurrent state), fixed at construction — gauges() reports
@@ -176,9 +191,14 @@ class KVPool:
             for b in self.buffers.values()))
         self.bytes_per_slot = self.kv_bytes_total // num_slots
         self.prefix_entries = prefix_entries
-        self.prefix_buffers = (
-            model_zoo.init_prefix_cache(cfg, prefix_entries, dtype)
-            if prefix_entries > 0 else None)
+        if prefix_entries > 0:
+            self.prefix_buffers = (
+                model_zoo.init_prefix_cache(cfg, prefix_entries, dtype)
+                if alloc else jax.eval_shape(
+                    lambda: model_zoo.init_prefix_cache(cfg, prefix_entries,
+                                                        dtype)))
+        else:
+            self.prefix_buffers = None
         self.block = np.zeros((num_slots, self.n_pages_per_slot), np.int32)
         # LIFO free list; physical page 0 is the null page, never allocated
         self._free: List[int] = list(range(num_pages - 1, 0, -1))

@@ -104,6 +104,42 @@ executable with every lane cond-skipped).
   holds after every tick (``validate=True``) and the pools' ``held_slots``
   are empty after drain.
 
+Mesh-sharded tier split (``mesh=``)
+-----------------------------------
+Passing a ``jax.sharding.Mesh`` with ``("data", "model")`` axes (see
+``launch/mesh.py``) turns the tick into the paper's ED/ES split at
+datacenter scale, still ONE compiled executable and ONE host fetch per
+tick:
+
+* **S tier — R data-parallel replicas.** ``shard_map`` over ``data`` runs
+  the UNCHANGED per-tier tick body once per replica; each replica owns a
+  disjoint ``num_slots`` slot slice, its own host allocator
+  (:class:`_TierRuntime` ``S0..S{R-1}``), and its own shard of ONE stacked
+  donated ``(R, ...)`` pool pytree (``P("data")``).  Host-side admission
+  round-robins requests across replicas; per-replica operands are built as
+  raw numpy (``tick_inputs(raw=True)``), stacked, and shipped with one
+  sharded ``device_put`` per tree.
+* **L tier — one GSPMD-sharded instance.** Params via
+  ``sharding/specs.param_shardings`` and paged KV pools via
+  ``paged_cache_shardings`` shard the K/V-head dimension over ``model``;
+  the L tick body itself is untouched (XLA partitions it).
+* **Overlapped escalation transfer.** Escalations cross the mesh through a
+  donated double-buffered staging tensor ``(2, admit_width, S_max)``: the
+  write half is filled by ``dynamic_update_slice`` at TICK TOP (no S-side
+  consumer, so the copy overlaps the same tick's prefill/decode — the
+  ``transfer_overlap`` telemetry phase), and the L admit lane reads last
+  tick's half, gathering per-admission rows — the host's ``admit_tokens``
+  copy is ZEROED on the mesh path, so the device transfer is load-bearing.
+  The resulting +1-tick L admission latency is the modelled ED→ES DCN hop;
+  a ``ready`` gate holds an escalation in the L queue until its staged row
+  is readable.
+* A ``(1, 1)`` debug mesh is semantics-free: greedy outputs are bitwise
+  the single-device path's in both ``kv_dtype`` modes
+  (tests/test_mesh_serving.py).  Faults/retry/breaker machinery is
+  host-side and unchanged (fault TIMING shifts by the DCN hop, as a real
+  hop would).  Speculative mode and ``use_kernel`` with ``model > 1`` are
+  explicitly rejected.
+
 Outputs are TOKEN-IDENTICAL to the drain path on the same bucketized
 prompts, for ANY ``admit_width``/``decode_block``, with prefix sharing ON or
 OFF and chunked prefill ON or OFF (the chunk lane's per-position math is the
@@ -417,16 +453,21 @@ class _TierRuntime:
                  prefix_entries: int = 0, max_prompt_len: int = 0,
                  num_pages: Optional[int] = None, chunk_size: int = 0,
                  chunk_width: int = 2, spec: bool = False,
-                 name: str = "S"):
+                 name: str = "S", alloc: bool = True):
         if num_pages is None:
             # sharing headroom: beyond every slot's full context, enough
             # pages to RETAIN prefix_entries full prompts without evicting
             # under load
             num_pages = num_slots * (max_context // page_size) + 1
             num_pages += prefix_entries * (-(-max_prompt_len // page_size))
+        # ``alloc=False``: this runtime is one DATA-axis replica of the
+        # mesh-sharded scheduler — it keeps the full host-side allocator
+        # (its own free list, block table, refcounts: the per-shard free
+        # lists) but its device buffers are ShapeDtypeStructs; the real
+        # allocation is one stacked (R, ...) donated tree the scheduler owns.
         self.pool = KVPool(cfg, num_slots, max_context, page_size,
                            num_pages=num_pages, dtype=dtype,
-                           prefix_entries=prefix_entries)
+                           prefix_entries=prefix_entries, alloc=alloc)
         self.sharing = prefix_entries > 0
         self.name = name               # tier label for telemetry tracks
         self.num_slots = num_slots
@@ -524,7 +565,12 @@ class _TierRuntime:
         self.chunk_left[slot] = 0
         return rec
 
-    def tick_inputs(self, s_max: int) -> Dict:
+    def tick_inputs(self, s_max: int, raw: bool = False) -> Dict:
+        """This tick's operand dict.  ``raw=True`` returns NUMPY leaves
+        (copies where state arrays are exposed) instead of device arrays —
+        the mesh dispatch path stacks R replicas' operands host-side and
+        ships each leaf with ONE sharded ``device_put``, which beats R
+        per-leaf ``jnp.stack`` + reshard by a wide margin per tick."""
         a = self.admit_width
         tokens = np.zeros((a, s_max), np.int32)
         lens = np.ones((a,), np.int32)
@@ -541,18 +587,18 @@ class _TierRuntime:
             seeds[row] = self.seeds[slot]
             temps[row] = self.temps[slot]
         out = {
-            "last_tok": jnp.asarray(self.last_tok),
-            "pos": jnp.asarray(self.pos),
-            "block": jnp.asarray(self.pool.block),
-            "seeds": jnp.asarray(self.seeds),
-            "tok_idx": jnp.asarray(self.tok_idx),
-            "temps": jnp.asarray(self.temps),
-            "admit_tokens": jnp.asarray(tokens),
-            "admit_len": jnp.asarray(lens),
-            "admit_slot": jnp.asarray(slots),
-            "admit_blocks": jnp.asarray(blocks),
-            "admit_seed": jnp.asarray(seeds),
-            "admit_temp": jnp.asarray(temps),
+            "last_tok": self.last_tok,
+            "pos": self.pos,
+            "block": self.pool.block,
+            "seeds": self.seeds,
+            "tok_idx": self.tok_idx,
+            "temps": self.temps,
+            "admit_tokens": tokens,
+            "admit_len": lens,
+            "admit_slot": slots,
+            "admit_blocks": blocks,
+            "admit_seed": seeds,
+            "admit_temp": temps,
         }
         occupied = np.asarray([r is not None for r in self.slot_req])
         if self.chunk_size:
@@ -596,28 +642,28 @@ class _TierRuntime:
                 dlive[slot] = cfin[row]    # joins decode the same tick
                 self.chunk_sched.append((slot, keep, bool(cfin[row])))
             out.update({
-                "chunk_tokens": jnp.asarray(ctoks),
-                "chunk_slot": jnp.asarray(cslot),
-                "chunk_pos": jnp.asarray(cpos),
-                "chunk_keep": jnp.asarray(ckeep),
-                "chunk_fin": jnp.asarray(cfin),
-                "any_chunk": jnp.asarray(bool(ckeep.any())),
-                "chunk_block": jnp.asarray(cblock),
-                "chunk_wblock": jnp.asarray(cwb),
-                "chunk_seed": jnp.asarray(cseed),
-                "chunk_temp": jnp.asarray(ctemp),
-                "draft_live": jnp.asarray(dlive),
-                "draft_wblock": jnp.asarray(
-                    np.where(dlive[:, None], base, 0).astype(np.int32)),
+                "chunk_tokens": ctoks,
+                "chunk_slot": cslot,
+                "chunk_pos": cpos,
+                "chunk_keep": ckeep,
+                "chunk_fin": cfin,
+                "any_chunk": np.asarray(bool(ckeep.any())),
+                "chunk_block": cblock,
+                "chunk_wblock": cwb,
+                "chunk_seed": cseed,
+                "chunk_temp": ctemp,
+                "draft_live": dlive,
+                "draft_wblock": np.where(dlive[:, None], base,
+                                         0).astype(np.int32),
             })
-            out["any_live"] = jnp.asarray(bool(dlive.any()))
+            out["any_live"] = np.asarray(bool(dlive.any()))
         else:
-            out["any_live"] = jnp.asarray(self.busy > 0)
+            out["any_live"] = np.asarray(self.busy > 0)
             if self.spec:
-                out["draft_live"] = jnp.asarray(occupied)
+                out["draft_live"] = occupied
         if not self.sharing:
-            out["any_prefill"] = jnp.asarray(bool(self.admitted))
-            return out
+            out["any_prefill"] = np.asarray(bool(self.admitted))
+            return self._finish_inputs(out, raw)
         entries = self.pool.prefix_entries
         starts = np.zeros((a,), np.int32)
         restore_mask = np.zeros((a,), bool)
@@ -640,18 +686,27 @@ class _TierRuntime:
             if plan.cow is not None:
                 cow_src[row], cow_dst[row] = plan.cow
         out.update({
-            "any_prefill": jnp.asarray(any_prefill),
-            "any_cow": jnp.asarray(bool(cow_dst.any())),
-            "admit_start": jnp.asarray(starts),
-            "restore_mask": jnp.asarray(restore_mask),
-            "restore_row": jnp.asarray(restore_row),
-            "restore_slot": jnp.asarray(restore_slot),
-            "save_row": jnp.asarray(save_row),
-            "cow_src": jnp.asarray(cow_src),
-            "cow_dst": jnp.asarray(cow_dst),
-            "wblock": jnp.asarray(self.pool.write_block()),
+            "any_prefill": np.asarray(any_prefill),
+            "any_cow": np.asarray(bool(cow_dst.any())),
+            "admit_start": starts,
+            "restore_mask": restore_mask,
+            "restore_row": restore_row,
+            "restore_slot": restore_slot,
+            "save_row": save_row,
+            "cow_src": cow_src,
+            "cow_dst": cow_dst,
+            "wblock": self.pool.write_block(),
         })
-        return out
+        return self._finish_inputs(out, raw)
+
+    @staticmethod
+    def _finish_inputs(out: Dict, raw: bool) -> Dict:
+        if raw:
+            # numpy leaves; live state arrays (pos / seeds / block ...) are
+            # copied so the caller's host-side stacking can never alias a
+            # runtime that mutates between build and dispatch
+            return {k: np.array(v) for k, v in out.items()}
+        return {k: jnp.asarray(v) for k, v in out.items()}
 
     def pool_operand(self) -> Dict:
         if self.sharing:
@@ -719,7 +774,7 @@ class ContinuousScheduler:
                  num_pages: Optional[int] = None,
                  chunk_prefill: bool = False, chunk_size: int = 8,
                  chunk_width: int = 2, speculative: bool = False,
-                 kv_dtype: str = "bf16"):
+                 kv_dtype: str = "bf16", mesh=None):
         if max_prompt_len % page_size:
             raise ValueError(f"max_prompt_len {max_prompt_len} must be a "
                              f"multiple of page_size {page_size}")
@@ -734,6 +789,24 @@ class ContinuousScheduler:
         self.kv_dtype = kv_dtype
         if chunk_prefill and chunk_size < 1:
             raise ValueError(f"chunk_size {chunk_size} must be >= 1")
+        if mesh is not None:
+            if speculative:
+                raise NotImplementedError(
+                    "speculative + mesh: the fused draft-verify cascade "
+                    "pairs S and L slots 1:1, which a replicated S tier "
+                    "breaks (same precedent as speculative + faults)")
+            for ax in ("data", "model"):
+                if ax not in mesh.shape:
+                    raise ValueError(
+                        f"serving mesh needs axes ('data', 'model'), got "
+                        f"{tuple(mesh.shape)}")
+            if use_kernel and mesh.shape["model"] > 1:
+                raise NotImplementedError(
+                    "use_kernel with model>1: the L tier's Pallas page-"
+                    "gather cannot be GSPMD-partitioned over the model axis "
+                    "(the S tier's kernels run per-shard under shard_map and "
+                    "are fine at any data size)")
+        self._mesh = mesh
         self.s = s_tier
         self.l = l_tier
         self.hi = hi
@@ -755,13 +828,17 @@ class ContinuousScheduler:
                      else 2 * num_slots) if prefix_sharing else 0
         l_entries = (prefix_entries if prefix_entries is not None
                      else 2 * l_slots) if prefix_sharing else 0
-        self.srt = _TierRuntime(s_tier.cfg, num_slots, max_context, page,
-                                admit_width, cache_dtype,
-                                prefix_entries=s_entries,
-                                max_prompt_len=max_prompt_len,
-                                num_pages=num_pages, chunk_size=self.chunk,
-                                chunk_width=chunk_width, spec=speculative,
-                                name="S")
+        n_rep = 1 if mesh is None else int(mesh.shape["data"])
+        self.srts: List[_TierRuntime] = [
+            _TierRuntime(s_tier.cfg, num_slots, max_context, page,
+                         admit_width, cache_dtype,
+                         prefix_entries=s_entries,
+                         max_prompt_len=max_prompt_len,
+                         num_pages=num_pages, chunk_size=self.chunk,
+                         chunk_width=chunk_width, spec=speculative,
+                         name="S" if mesh is None else f"S{r}",
+                         alloc=mesh is None)
+            for r in range(n_rep)]
         self.lrt = _TierRuntime(l_tier.cfg, l_slots, max_context, page,
                                 admit_width if speculative
                                 else min(admit_width, l_slots), cache_dtype,
@@ -807,6 +884,12 @@ class ContinuousScheduler:
         self._esc_meta: Dict[int, Escalation] = {}
         self._probe: Optional[int] = None
         self._tick0 = 0
+        # escalation transfer staging (mesh mode): rows the L admit lane may
+        # read THIS tick (written last tick) and rows being written this tick
+        self._staged: Dict[int, int] = {}
+        self._staged_next: Dict[int, int] = {}
+        self._stage_tokens = np.zeros((0, 0), np.int32)
+        self._stage_wix = 0
 
         s_role = "spec_s" if speculative else "plain"
         l_role = "spec_l" if speculative else "plain"
@@ -843,15 +926,122 @@ class ContinuousScheduler:
                        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype))
         s_in0 = self.srt.tick_inputs(self._admit_s_max)
         l_in0 = self.lrt.tick_inputs(self._admit_s_max)
+        if mesh is None:
+            with warnings.catch_warnings():
+                warnings.filterwarnings("ignore", message=".*[Dd]onat")
+                self._exec = jax.jit(tick, donate_argnums=(5, 6)).lower(
+                    spec(self.s.params), spec(self.l.params),
+                    jax.ShapeDtypeStruct((), jnp.float32),
+                    spec(s_in0), spec(l_in0),
+                    spec(self.srt.pool_operand()),
+                    spec(self.lrt.pool_operand())).compile()
+        else:
+            self._build_mesh_exec(mesh, s_tick, l_tick, spec, s_in0, l_in0)
+        self.counters.compiles += 1
+
+    @property
+    def srt(self) -> _TierRuntime:
+        """Replica 0's runtime — THE runtime on the single-device path (the
+        historical attribute; mesh-unaware callers and tests keep working)."""
+        return self.srts[0]
+
+    def _build_mesh_exec(self, mesh, s_tick, l_tick, spec, s_in0, l_in0
+                         ) -> None:
+        """Compile the mesh-aware tick: ``shard_map`` the S tier over
+        ``data`` (one replica per shard, running the UNMODIFIED per-tier
+        tick on its own slot slice + pool shard), GSPMD-shard the L tier's
+        params and KV pages over ``model``, and thread the donated
+        double-buffered escalation staging buffer through the same single
+        executable.  Still ONE compile, ONE host fetch per tick."""
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.sharding import specs as sh
+
+        n_rep = len(self.srts)
+        ns_rep = NamedSharding(mesh, P())
+        ns_data = NamedSharding(mesh, P("data"))
+        self._ns_rep, self._ns_data = ns_rep, ns_data
+
+        # one-time placement: S params replicated, L params model-sharded by
+        # the existing partition rules, L pool pages model-sharded on the
+        # KV-head dim, S pools ONE stacked (R, ...) zero tree over ``data``
+        self._s_params = jax.device_put(self.s.params, ns_rep)
+        l_param_sh = sh.param_shardings(self.l.params, mesh, fsdp=False)
+        self._l_params = jax.device_put(self.l.params, l_param_sh)
+        l_core_sh = sh.paged_cache_shardings(self.l.cfg, mesh,
+                                             self.lrt.pool.buffers)
+        self.lrt.pool.buffers = jax.device_put(self.lrt.pool.buffers,
+                                               l_core_sh)
+        l_pool_sh = {"core": l_core_sh}
+        if self.lrt.sharing:
+            self.lrt.pool.prefix_buffers = jax.device_put(
+                self.lrt.pool.prefix_buffers, ns_rep)
+            l_pool_sh["prefix"] = jax.tree.map(
+                lambda _: ns_rep, self.lrt.pool.prefix_buffers)
+        self._s_pool = jax.tree.map(
+            lambda s: jax.device_put(
+                jnp.zeros((n_rep,) + s.shape, s.dtype), ns_data),
+            self.srt.pool_operand())
+        t_rows = self.lrt.admit_width
+        self._stage = {"buf": jax.device_put(
+            jnp.zeros((2, t_rows, self._admit_s_max), jnp.int32), ns_rep)}
+        self._stage_tokens = np.zeros((t_rows, self._admit_s_max), np.int32)
+
+        def s_body(s_params, theta, s_in, s_pool):
+            tin = jax.tree.map(lambda a: a[0], s_in)
+            pool = jax.tree.map(lambda a: a[0], s_pool)
+            out, pool = s_tick(s_params, theta, tin, pool)
+            return (jax.tree.map(lambda a: a[None], out),
+                    jax.tree.map(lambda a: a[None], pool))
+
+        # check_rep=False: the body is replicated over the (unused) model
+        # axis; replication checking can't see that through the squeezes
+        s_sharded = shard_map(s_body, mesh=mesh,
+                              in_specs=(P(), P(), P("data"), P("data")),
+                              out_specs=(P("data"), P("data")),
+                              check_rep=False)
+
+        def tick(s_params, l_params, theta, s_in, l_in, s_pool, l_pool,
+                 stage):
+            # tick top: copy this tick's escalation rows into the WRITE half
+            # of the staging buffer.  Nothing on the S side depends on it,
+            # so XLA schedules the transfer alongside the S lanes — the
+            # S->L hop never sits on the critical path.  The admit lane
+            # reads the OTHER half: rows staged LAST tick.
+            wix = l_in["stage_wix"]
+            buf = jax.lax.dynamic_update_slice(
+                stage["buf"], l_in["stage_tokens"][None], (wix, 0, 0))
+            read = jax.lax.dynamic_slice(
+                buf, (1 - wix, 0, 0), (1,) + buf.shape[1:])[0]
+            l_in = dict(l_in, admit_tokens=read[l_in["stage_row"]])
+            s_out, s_pool = s_sharded(s_params, theta, s_in, s_pool)
+            l_out, l_pool = l_tick(l_params, theta, l_in, l_pool)
+            return ({"s": s_out, "l": l_out}, s_pool, l_pool, {"buf": buf})
+
+        stack = partial(jax.tree.map, lambda a: jax.ShapeDtypeStruct(
+            (n_rep,) + a.shape, a.dtype))
+        l_in_spec = dict(
+            spec(l_in0),
+            stage_tokens=jax.ShapeDtypeStruct(
+                (t_rows, self._admit_s_max), jnp.int32),
+            stage_row=jax.ShapeDtypeStruct((t_rows,), jnp.int32),
+            stage_wix=jax.ShapeDtypeStruct((), jnp.int32))
+        stage_sh = {"buf": ns_rep}
+        in_sh = (ns_rep, l_param_sh, ns_rep, ns_data, ns_rep,
+                 ns_data, l_pool_sh, stage_sh)
+        out_sh = ({"s": ns_data, "l": ns_rep}, ns_data, l_pool_sh, stage_sh)
         with warnings.catch_warnings():
             warnings.filterwarnings("ignore", message=".*[Dd]onat")
-            self._exec = jax.jit(tick, donate_argnums=(5, 6)).lower(
-                spec(self.s.params), spec(self.l.params),
-                jax.ShapeDtypeStruct((), jnp.float32),
-                spec(s_in0), spec(l_in0),
-                spec(self.srt.pool_operand()),
-                spec(self.lrt.pool_operand())).compile()
-        self.counters.compiles += 1
+            self._exec = jax.jit(
+                tick, donate_argnums=(5, 6, 7), in_shardings=in_sh,
+                out_shardings=out_sh).lower(
+                    spec(self.s.params), spec(self.l.params),
+                    jax.ShapeDtypeStruct((), jnp.float32),
+                    stack(s_in0), l_in_spec,
+                    stack(self.srt.pool_operand()),
+                    spec(self.lrt.pool_operand()),
+                    spec(self._stage)).compile()
 
     def set_faults(self, faults: Optional[FaultSchedule] = None,
                    policy: Optional[RetryPolicy] = None,
@@ -908,7 +1098,8 @@ class ContinuousScheduler:
         """Engine-level sampling temperature used for requests that don't set
         their own (Request.temperature > 0 wins) — keeps ``serve_stream``
         consistent with ``serve``'s engine-wide temperature."""
-        self.srt.default_temp = float(temperature)
+        for rt in self.srts:
+            rt.default_temp = float(temperature)
         self.lrt.default_temp = float(temperature)
 
     @property
@@ -916,7 +1107,7 @@ class ContinuousScheduler:
         """Cumulative prefix-cache counters summed over both tiers: hits /
         full_hits / tokens_saved / cow_copies / evictions."""
         agg: Dict[str, int] = {}
-        for rt in (self.srt, self.lrt):
+        for rt in (*self.srts, self.lrt):
             for k, v in rt.pool.stats.items():
                 agg[k] = agg.get(k, 0) + v
         return agg
@@ -929,6 +1120,8 @@ class ContinuousScheduler:
         sync)."""
         from repro.serving import engine as engine_mod   # _host_fetch hook
 
+        if self._mesh is not None:
+            return self._dispatch_mesh(theta_j)
         tel = self.tel
         s_in = self.srt.tick_inputs(self._admit_s_max)
         l_in = self.lrt.tick_inputs(self._admit_s_max)
@@ -950,15 +1143,95 @@ class ContinuousScheduler:
         self.counters.ticks += 1
         return host
 
+    def _prepare_stage(self, l_queue, cur: int) -> None:
+        """Stage up to ``lrt.admit_width`` head-of-queue escalations for the
+        NEXT tick's L admit lane: their (padded) prompt tokens are copied
+        into the staging buffer's write half inside THIS tick's dispatch, so
+        the transfer overlaps this tick's S-side compute.  An escalation is
+        re-staged every tick until admitted (its row may move); the host
+        remembers rid -> row for the gate in ``_try_admit``."""
+        t_rows, s_max = self._stage_tokens.shape
+        tokens = np.zeros((t_rows, s_max), np.int32)
+        nxt: Dict[int, int] = {}
+        for i, adm in enumerate(l_queue):
+            if i >= t_rows:
+                break
+            n = min(adm.bucket, s_max)
+            tokens[i, :n] = adm.tokens[:n]
+            nxt[adm.request.request_id] = i
+        self._stage_tokens = tokens
+        self._staged_next = nxt
+        self._stage_wix = cur % 2
+
+    def _dispatch_mesh(self, theta_j):
+        """Mesh-mode tick dispatch: stage the escalation transfer operands
+        FIRST (tick top — the device copy into the write half has no S-side
+        consumers, so it overlaps the same tick's prefill/decode), then stack
+        the per-replica S operands over ``data`` and run the one executable.
+        Still exactly ONE compile and ONE host fetch per tick per host."""
+        from repro.serving import engine as engine_mod   # _host_fetch hook
+
+        tel = self.tel
+        t_rows = self.lrt.admit_width
+        rows = np.zeros((t_rows,), np.int32)
+        for row, slot in enumerate(self.lrt.admitted):
+            rid = self.lrt.slot_req[slot].adm.request.request_id
+            rows[row] = self._staged[rid]   # gate guarantees membership
+        stage_in = jax.device_put(
+            {"stage_tokens": self._stage_tokens, "stage_row": rows,
+             "stage_wix": np.asarray(self._stage_wix, np.int32)},
+            self._ns_rep)
+        if tel is not None:
+            tel.mark("transfer_overlap")
+        # raw numpy leaves stacked host-side, then ONE sharded transfer per
+        # tree — per-leaf jnp.stack + reshard dominated the tick wall time
+        s_raw = [rt.tick_inputs(self._admit_s_max, raw=True)
+                 for rt in self.srts]
+        s_in = jax.device_put(
+            jax.tree.map(lambda *xs: np.stack(xs), *s_raw), self._ns_data)
+        l_in = self.lrt.tick_inputs(self._admit_s_max, raw=True)
+        # the device-side staging buffer is the authoritative token source
+        # for the L admit lane — zero the host copy so the transfer path is
+        # load-bearing, not decorative
+        l_in["admit_tokens"] = np.zeros_like(l_in["admit_tokens"])
+        l_in = jax.device_put(l_in, self._ns_rep)
+        l_in.update(stage_in)
+        theta_j = jax.device_put(np.asarray(theta_j), self._ns_rep)
+        if tel is not None:
+            tel.mark("build_operands")
+        with warnings.catch_warnings():
+            warnings.filterwarnings("ignore", message=".*[Dd]onat")
+            out, s_pool, l_pool, stage = self._exec(
+                self._s_params, self._l_params, theta_j, s_in, l_in,
+                self._s_pool, self.lrt.pool_operand(), self._stage)
+        self._s_pool = s_pool
+        self.lrt.store_pool(l_pool)
+        self._stage = stage
+        self._staged = self._staged_next   # write half becomes readable
+        if tel is not None:
+            tel.mark("dispatch")
+        host = engine_mod._host_fetch(out)   # the tick's single sync
+        if tel is not None:
+            tel.mark("host_fetch")
+        self.counters.ticks += 1
+        return host
+
     def _gauges(self, l_queue_len: int = 0) -> Dict[str, float]:
         """Per-tick telemetry gauges — all host state the scheduler already
         holds, so sampling costs no device traffic."""
         g: Dict[str, float] = {}
-        for rt in (self.srt, self.lrt):
+        for rt in (*self.srts, self.lrt):
             for k, v in rt.pool.gauges().items():
                 g[f"{k}@{rt.name}"] = v
             g[f"busy_slots@{rt.name}"] = rt.busy
         g["l_queue_depth"] = l_queue_len
+        if self._mesh is not None:
+            # transfer staging buffer: rows readable this tick (occupancy of
+            # the read half) + the ping-pong write index — flight-recorder
+            # snapshots carry these alongside the per-replica @S{r} gauges
+            g["stage_occupancy"] = len(self._staged)
+            g["stage_wix"] = self._stage_wix
+            g["replicas"] = len(self.srts)
         if self._link is not None:
             g["esc_in_flight"] = self._link.pending
         if self._breaker is not None:
@@ -1065,10 +1338,14 @@ class ContinuousScheduler:
         self._esc_meta = {}
         self._probe = None
         self._opens_seen = 0
+        # mesh mode: the staging pipeline re-anchors per run — nothing from
+        # an earlier run's buffer halves is readable
+        self._staged = {}
+        self._staged_next = {}
         stall, idle = self._stall_limit(), 0
         l_queue: deque = deque()
-        while (len(queue) or l_queue or self.srt.busy or self.lrt.busy
-               or self._link.pending):
+        while (len(queue) or l_queue or any(rt.busy for rt in self.srts)
+               or self.lrt.busy or self._link.pending):
             if tel is not None:
                 tel.begin_tick(self.counters.ticks)
             cur = self.counters.ticks - self._tick0
@@ -1079,12 +1356,23 @@ class ContinuousScheduler:
                 if state == CircuitBreaker.CLOSED:
                     self._probe = None
             self._fault_tick(cur, l_queue, results)
-            self._try_admit(self.srt, queue,
-                            on_give_up=lambda adm: self._reject(adm, results))
+            for rt in self.srts:
+                self._try_admit(rt, queue,
+                                on_give_up=lambda adm: self._reject(adm,
+                                                                    results))
             self._drop_expired(l_queue, results, cur)
+            # mesh mode gates L admission on the staging pipeline: only
+            # escalations whose tokens were staged LAST tick (readable from
+            # the buffer's read half this tick) may admit — the +1 tick is
+            # the modelled DCN hop, paid off the critical path
+            ready = None if self._mesh is None else \
+                (lambda adm: adm.request.request_id in self._staged)
             self._try_admit(self.lrt, l_queue, limit=self._l_admit_limit(cur),
                             on_give_up=lambda adm: self._l_give_up(adm, cur,
-                                                                   results))
+                                                                   results),
+                            ready=ready)
+            if self._mesh is not None:
+                self._prepare_stage(l_queue, cur)
             for slot in range(self.lrt.num_slots):
                 rec = self.lrt.slot_req[slot]
                 if rec is None:
@@ -1097,10 +1385,12 @@ class ContinuousScheduler:
                         self._probe = esc.rid
             if tel is not None:
                 tel.mark("fault_tick")   # fault machinery + admission
-            if not (len(queue) or l_queue or self.srt.busy or self.lrt.busy
+            s_busy = any(rt.busy for rt in self.srts)
+            if not (len(queue) or l_queue or s_busy or self.lrt.busy
                     or self._link.pending):
                 break                  # everything left resolved host-side
-            if (self.srt.busy or self.lrt.busy or self.srt.admitted
+            if (s_busy or self.lrt.busy
+                    or any(rt.admitted for rt in self.srts)
                     or self.lrt.admitted):
                 idle = 0
             else:
@@ -1122,13 +1412,24 @@ class ContinuousScheduler:
             open_now = self._breaker.state == CircuitBreaker.OPEN
             self._eff_theta = FAIL_LOCAL_THETA if open_now else theta
             host = self._dispatch(theta_fail_j if open_now else theta_j)
-            self._absorb(self.srt, host["s"],
-                         lambda rec: self._finish_s(rec, theta, results))
+            if self._mesh is None:
+                self._absorb(self.srt, host["s"],
+                             lambda rec: self._finish_s(rec, theta, results))
+            else:
+                # host["s"] leaves carry the stacked replica axis: each
+                # replica absorbs its own slice of the fetched outputs
+                for r, rt in enumerate(self.srts):
+                    self._absorb(rt,
+                                 jax.tree.map(lambda a, _r=r: a[_r],
+                                              host["s"]),
+                                 lambda rec: self._finish_s(rec, theta,
+                                                            results))
             self._absorb(self.lrt, host["l"],
                          lambda rec: self._finish_l(rec, results))
             if self.validate:
                 try:
-                    self.srt.pool.check_invariants()
+                    for rt in self.srts:
+                        rt.pool.check_invariants()
                     self.lrt.pool.check_invariants()
                 except AssertionError as e:
                     if self.fr is not None:
@@ -1281,15 +1582,17 @@ class ContinuousScheduler:
     # -- admission / completion -------------------------------------------
 
     def _try_admit(self, rt: _TierRuntime, queue, limit: Optional[int] = None,
-                   on_give_up=None) -> None:
+                   on_give_up=None, ready=None) -> None:
         """Admit up to ``admit_width`` queued requests into free slots.
         ``queue`` is the AdmissionQueue (S tier) or the escalation deque
         (L tier); both speak the same popleft/appendleft head interface.
         ``limit`` caps this tick's admissions (0 = the L tier is paused —
-        outage / spike / open breaker; 1 = the half-open probe).  A request
-        that keeps failing admission hands off to ``on_give_up`` after
-        ``RetryPolicy.admit_retry_limit`` fruitless ticks instead of
-        re-queueing forever (bounded backpressure)."""
+        outage / spike / open breaker; 1 = the half-open probe).  ``ready``
+        (mesh mode) gates on the staging pipeline: admission stops at the
+        first head entry whose tokens are not yet readable from the
+        transfer buffer.  A request that keeps failing admission hands off
+        to ``on_give_up`` after ``RetryPolicy.admit_retry_limit`` fruitless
+        ticks instead of re-queueing forever (bounded backpressure)."""
         rt.admitted = []
         rt.plans = []
         if limit == 0:
@@ -1299,6 +1602,8 @@ class ContinuousScheduler:
         admitted = 0
         while admitted < cap and len(queue):
             if rt.free_slot() is None:
+                break
+            if ready is not None and not ready(queue[0]):
                 break
             adm = queue.popleft()
             steps = min(adm.request.max_new_tokens, self.max_new_tokens)

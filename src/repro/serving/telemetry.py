@@ -135,9 +135,13 @@ from collections.abc import MutableMapping
 from dataclasses import dataclass, field, fields
 from typing import Any, Dict, List, Optional, Tuple
 
-# Tick-phase wall-time buckets, in intra-tick order.
-PHASES = ("fault_tick", "build_operands", "dispatch", "host_fetch",
-          "postprocess")
+# Tick-phase wall-time buckets, in intra-tick order.  ``transfer_overlap``
+# only accumulates in mesh mode: it brackets the escalation staging-buffer
+# operand build + device copy dispatched at tick top, i.e. the S->L transfer
+# work that the sharded executable overlaps with the same tick's S-side
+# prefill/decode (bench_serving --mesh-smoke asserts it is nonzero).
+PHASES = ("fault_tick", "transfer_overlap", "build_operands", "dispatch",
+          "host_fetch", "postprocess")
 
 _now = time.monotonic
 
@@ -526,7 +530,10 @@ class Telemetry:
                      start: int = 0) -> None:
         tr = self._trace(rid, submit_t)
         t0, t1 = self.tick_bracket
-        if tier == "S" and not any(s.kind == "queued" for s in tr.spans):
+        # mesh mode names the S replicas "S0".."S{R-1}"; every S-side tier
+        # label starts the queued span, the exact "L" label opens l_verify
+        if tier.startswith("S") and not any(s.kind == "queued"
+                                            for s in tr.spans):
             tr.submit_t = submit_t
             tr.spans.append(Span("queued", submit_t, t0, "S"))
         tr.spans.append(Span("admitted", t0, t1, tier, slot,
@@ -651,7 +658,15 @@ class Telemetry:
             lines.append("# TYPE hi_gauge gauge")
             for k, v in sorted(self.ticks[-1].gauges.items()):
                 name, _, tier = k.partition("@")
-                tag = f',tier="{escape_label(tier)}"' if tier else ""
+                # mesh-replica tiers ("S0".."S{R-1}") split into a stable
+                # tier="S" plus a replica label, so one PromQL selector
+                # aggregates over replicas; plain "S"/"L" stay single-label
+                if len(tier) > 1 and tier[0] == "S" and tier[1:].isdigit():
+                    tag = f',tier="S",replica="{tier[1:]}"'
+                elif tier:
+                    tag = f',tier="{escape_label(tier)}"'
+                else:
+                    tag = ""
                 lines.append(
                     f'hi_gauge{{name="{escape_label(name)}"{tag}}} {v}')
         for name, h in self.hists.items():

@@ -37,6 +37,20 @@ from typing import Any, Dict, List
 # transport/queue pseudo-slots get a tid far above any real slot index
 _QUEUE_TID = 1000
 _TIER_PID = {"S": 1, "L": 2, "": 0}
+# mesh replicas: first replica-specific pid; replica r renders as its own
+# process so Perfetto shows one lane group per S shard
+_REPLICA_PID0 = 3
+
+
+def _tier_pid(tier: str) -> int:
+    """pid for a tier label: "S"/"L"/"" are fixed; mesh replica labels
+    ("S0".."S{R-1}") map to stable per-replica pids (S0 shares pid 1 with
+    the historical single-S process — replica 0 IS that process at a 1x1
+    debug mesh)."""
+    if len(tier) > 1 and tier[0] == "S" and tier[1:].isdigit():
+        r = int(tier[1:])
+        return 1 if r == 0 else _REPLICA_PID0 + (r - 1)
+    return _TIER_PID.get(tier, 0)
 
 
 def _epoch(tel) -> float:
@@ -72,6 +86,15 @@ def chrome_trace(tel) -> Dict[str, Any]:
     meta(2, None, "process_name", "L tier")
     meta(1, _QUEUE_TID, "thread_name", "admission queue")
     meta(1, _QUEUE_TID + 1, "thread_name", "escalation transport")
+    # mesh replicas beyond S0 get their own process lanes, named up front
+    # from the tier labels actually present in the trace
+    named_pids = {0, 1, 2}
+    for tr in tel.traces.values():
+        for s in tr.spans:
+            pid = _tier_pid(s.tier)
+            if pid not in named_pids:
+                named_pids.add(pid)
+                meta(pid, None, "process_name", f"S tier replica {s.tier[1:]}")
     seen_tids = set()
 
     # -- scheduler ticks: phase slices + gauge counters ---------------------
@@ -94,7 +117,7 @@ def chrome_trace(tel) -> Dict[str, Any]:
     for rid in sorted(tel.traces):
         tr = tel.traces[rid]
         for s in tr.spans:
-            pid = _TIER_PID.get(s.tier, 0)
+            pid = _tier_pid(s.tier)
             if s.kind == "queued":
                 tid = _QUEUE_TID
             elif s.kind in ("escalate_attempt", "escalate_backoff"):
